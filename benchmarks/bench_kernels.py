@@ -1,0 +1,42 @@
+"""Pallas kernel microbenchmarks (interpret mode on CPU: correctness-path
+timing, not TPU performance — TPU perf is the §Roofline story)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(rows: List[Dict]) -> None:
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    dt = _time(lambda a, b: ops.maxplus_matmul(a, b, bm=64, bk=64, bn=64), A, B)
+    rows.append({"name": "kernel/maxplus_256", "us_per_call": dt * 1e6,
+                 "derived": "interpret=True"})
+
+    Ab = A.astype(jnp.bfloat16); Bb = B.astype(jnp.bfloat16)
+    dt = _time(lambda a, b: ops.gemm(a, b, bm=64, bk=64, bn=64), Ab, Bb)
+    rows.append({"name": "kernel/systolic_gemm_256", "us_per_call": dt * 1e6,
+                 "derived": "interpret=True;bf16"})
+
+    q = jnp.asarray(rng.normal(size=(4, 256, 64)), jnp.float32)
+    dt = _time(lambda x: ops.flash_attention(x, x, x, bq=64, bk=64), q)
+    rows.append({"name": "kernel/flash_attn_256", "us_per_call": dt * 1e6,
+                 "derived": "interpret=True"})

@@ -1,0 +1,35 @@
+"""Workload mapping benchmark (§5): every assigned architecture's train_4k
+step mapped onto the TPU-v5e ACADL model; AIDG step-time estimate vs the
+analytic compute roofline (cross-validation of the accelerator model)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.configs import all_arch_ids, get_config
+from repro.core.aidg import estimate_cycles
+from repro.core.archs import TPU_V5E, make_tpu_v5e_ag
+from repro.core.mapping.workload import map_to_tpu
+from repro.models import SHAPES
+
+
+def run(rows: List[Dict]) -> None:
+    shape = SHAPES["train_4k"]
+    chips = 256
+    for arch in all_arch_ids():
+        cfg = get_config(arch)
+        ag, _ = make_tpu_v5e_ag()
+        prog = map_to_tpu(cfg, shape, per_device=chips)
+        t0 = time.perf_counter()
+        cycles, aidg = estimate_cycles(ag, prog)
+        dt = time.perf_counter() - t0
+        secs = cycles / (TPU_V5E["clock_ghz"] * 1e9)
+        tokens = shape.global_batch * shape.seq_len
+        analytic = (6 * cfg.n_active_params() * tokens / chips
+                    / TPU_V5E["peak_bf16_flops"])
+        rows.append({"name": f"workload/{arch}", "us_per_call": dt * 1e6,
+                     "derived": (f"est_ms_per_step={secs * 1e3:.1f};"
+                                 f"analytic_ms={analytic * 1e3:.1f};"
+                                 f"ratio={secs / max(analytic, 1e-12):.2f};"
+                                 f"instrs={len(prog)}")})

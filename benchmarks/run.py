@@ -1,0 +1,27 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (and writes bench_output.txt is the
+caller's job via tee).  Usage: PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import Dict, List
+
+
+def main() -> int:
+    from . import bench_dse, bench_kernels, bench_paper, bench_workloads
+
+    rows: List[Dict] = []
+    for mod in (bench_paper, bench_dse, bench_workloads, bench_kernels):
+        mod.run(rows)
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

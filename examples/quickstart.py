@@ -1,0 +1,42 @@
+"""Quickstart: train a small LM end-to-end on CPU, then estimate its step
+time on modeled accelerators with ACADL.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.aidg import estimate_cycles
+from repro.core.archs import TPU_V5E, make_tpu_v5e_ag
+from repro.core.mapping.workload import map_to_tpu
+from repro.launch.train import train_loop
+from repro.models import SHAPES
+from repro.models.config import ShapeConfig
+
+
+def main():
+    # --- 1. train a reduced olmo-style model for a few hundred steps ------
+    cfg = get_smoke_config("olmo-1b")
+    print(f"training {cfg.arch_id} (smoke config, "
+          f"{cfg.n_params()/1e6:.1f}M params) ...")
+    params, metrics = train_loop(cfg, steps=200, batch=8, seq=128,
+                                 ckpt_dir="/tmp/quickstart_ckpt",
+                                 ckpt_every=100)
+    losses = [r["loss"] for r in metrics.rows]
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+    # --- 2. ACADL: how fast would the FULL olmo-1b train on a TPU-v5e? ----
+    from repro.configs import get_config
+    full = get_config("olmo-1b")
+    shape = SHAPES["train_4k"]
+    ag, _ = make_tpu_v5e_ag()
+    prog = map_to_tpu(full, shape, per_device=256)
+    cycles, _ = estimate_cycles(ag, prog)
+    secs = cycles / (TPU_V5E["clock_ghz"] * 1e9)
+    print(f"ACADL estimate: {full.arch_id} {shape.name} on 256 modeled "
+          f"v5e chips: {secs*1e3:.1f} ms/step")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Fault-tolerant checkpointing: atomic manifests, auto-resume, elastic
+re-sharding on restore."""
+
+from .checkpoint import (CheckpointManager, latest_checkpoint, load_pytree,
+                         save_pytree)
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree",
+           "latest_checkpoint"]

@@ -1,0 +1,1 @@
+"""repro.core — the paper's contribution: ACADL + AIDG + accelerator zoo + mapping."""

@@ -1,0 +1,27 @@
+"""AIDG: Architectural Instruction Dependency Graph fast estimation
+(paper §6, [16]) — numpy exact path, JAX max-plus paths, DSE sweeps."""
+
+from .builder import (
+    AIDG,
+    build_aidg,
+    estimate_cycles,
+    longest_path,
+    longest_path_fixed_point,
+)
+from .maxplus import (
+    fixed_point_jax,
+    longest_path_blocked,
+    longest_path_scan,
+    maxplus_closure,
+    maxplus_matmul_jnp,
+    slot_queue_scan,
+)
+from .dse import DSEProblem, evaluate_theta, make_problem, sweep
+
+__all__ = [
+    "AIDG", "build_aidg", "estimate_cycles", "longest_path",
+    "longest_path_fixed_point",
+    "longest_path_scan", "longest_path_blocked", "fixed_point_jax",
+    "maxplus_closure", "maxplus_matmul_jnp", "slot_queue_scan",
+    "DSEProblem", "make_problem", "evaluate_theta", "sweep",
+]

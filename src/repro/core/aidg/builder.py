@@ -1,0 +1,324 @@
+"""AIDG — Architectural Instruction Dependency Graph (paper §6, [16]).
+
+The event-driven simulator (``repro.core.acadl.sim``) is the cycle-accurate
+oracle; the AIDG is the paper's fast path: instruction completion times
+satisfy the max-plus recurrence
+
+    t_i = w_i + max(base_i, max_{j -> i} (t_j + d_ji))
+
+over a DAG whose forward edges encode
+
+* **data dependencies** — RAW/WAW from the program-order last-writer map
+  (paper Fig. 11),
+* **structural hazards** — serialization of instructions through the same
+  FunctionalUnit / ExecuteStage (Fig. 10),
+* **branch bubbles** — the fetch group after a pc-writer waits for the
+  branch to resolve plus a fetch + route refill (Fig. 9),
+* **issue-buffer backpressure** — instruction i cannot be in flight before
+  instruction i - issue_buffer_size left the buffer,
+
+with ``base_i`` the static fetch-visibility time of i's fetch group.
+
+**DataStorage request slots** (Figs. 12/13) are *not* program-order
+serializable: the hardware services requests in arrival order across all
+MemoryAccessUnits.  They are handled by the queueing fixed point of
+``longest_path_fixed_point``: relax the DAG, replay each storage's accesses
+in estimated-arrival order against its request slots, fold the resulting
+delays back into the node bases, and iterate — the paper's "fixed point
+analysis of consecutive loop iterations" ([16]) in max-plus form.
+
+All DAG edges point forward in trace order, so each relaxation is one O(E)
+pass — ``numpy`` here; ``repro.core.aidg.maxplus`` evaluates the same
+relaxation as blocked max-plus linear algebra (JAX / Pallas), and
+``repro.core.aidg.dse`` vmaps it over accelerator latency parameters for
+design-space exploration (the paper's NAS/co-design loop).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..acadl.graph import ArchitectureGraph
+from ..acadl.sim import TraceEntry, build_trace
+from ..acadl.units import FunctionalUnit
+
+__all__ = ["AIDG", "build_aidg", "longest_path", "longest_path_fixed_point",
+           "estimate_cycles"]
+
+MAX_PREDS = 12  # padded predecessor slots per node (for the jnp/Pallas path)
+
+
+@dataclass
+class AIDG:
+    """Padded-CSR forward DAG with per-node work and base offsets."""
+
+    n: int
+    work: np.ndarray          # (n,) float32 — w_i = max(1, fu_lat + mem_lat)
+    fu_lat: np.ndarray        # (n,) float32 — functional-unit latency
+    mem_lat: np.ndarray       # (n,) float32 — total storage latency
+    base: np.ndarray          # (n,) float32 — fetch visibility + route latency
+    preds: np.ndarray         # (n, MAX_PREDS) int32 — predecessor ids, -1 pad
+    pred_extra: np.ndarray    # (n, MAX_PREDS) float32 — extra edge delay
+    #                           (t_i >= t_j + pred_extra + w_i)
+    # --- storage request-slot queueing (arrival-ordered fixed point) ---
+    storage_nodes: Dict[str, np.ndarray] = field(default_factory=dict)
+    storage_lat: Dict[str, np.ndarray] = field(default_factory=dict)
+    storage_slots: Dict[str, int] = field(default_factory=dict)
+    # --- metadata for parameterized re-weighting (DSE) ---
+    op_class: np.ndarray = None       # (n,) int32
+    op_scale: np.ndarray = None       # (n,) float32 — macs/words of the instr
+    mem_words: np.ndarray = None      # (n,) float32
+    classes: Dict[str, int] = field(default_factory=dict)
+    stats: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def edges(self) -> int:
+        return int((self.preds >= 0).sum())
+
+
+def _fetch_schedule(ag: ArchitectureGraph, trace: Sequence[TraceEntry]
+                    ) -> Tuple[np.ndarray, List[List[int]], int]:
+    """Static visibility time of each instruction's fetch group (Fig. 9),
+    ignoring dynamic stalls (branch bubbles become AIDG edges)."""
+    fetch = ag.fetch_stages[0]
+    imau = fetch.imau
+    imem = imau.instruction_memory
+    port_width = max(1, imem.port_width)
+    imem_read_lat = imem.access_latency("read", 0)
+    fetch_cost = max(1, imem_read_lat + imau.latency.resolve())
+
+    groups: List[List[int]] = []
+    cur: List[int] = []
+    for e in trace:
+        cur.append(e.idx)
+        if len(cur) >= port_width or e.is_pc_writer:
+            groups.append(cur)
+            cur = []
+    if cur:
+        groups.append(cur)
+
+    visible = np.zeros(len(trace), dtype=np.float32)
+    t = 0
+    for g in groups:
+        t += fetch_cost
+        for idx in g:
+            visible[idx] = t
+    return visible, groups, fetch_cost
+
+
+def build_aidg(ag: ArchitectureGraph, trace: Sequence[TraceEntry],
+               include_buffer_edges: bool = True) -> AIDG:
+    n = len(trace)
+    work = np.ones(n, dtype=np.float32)
+    fu_lat_arr = np.zeros(n, dtype=np.float32)
+    mem_lat_arr = np.zeros(n, dtype=np.float32)
+    base = np.zeros(n, dtype=np.float32)
+    route_lat_arr = np.zeros(n, dtype=np.float32)
+    preds: List[List[Tuple[int, float]]] = [[] for _ in range(n)]
+
+    op_class = np.zeros(n, dtype=np.int32)
+    op_scale = np.ones(n, dtype=np.float32)
+    mem_words = np.zeros(n, dtype=np.float32)
+    classes: Dict[str, int] = {}
+
+    visible, groups, fetch_cost = _fetch_schedule(ag, trace)
+    fetch = ag.fetch_stages[0]
+    ibs = max(1, fetch.issue_buffer_size)
+
+    last_on_unit: Dict[str, int] = {}
+    last_on_stage: Dict[str, int] = {}
+    storage_nodes: Dict[str, List[int]] = {}
+    storage_lat: Dict[str, List[float]] = {}
+    storage_slots: Dict[str, int] = {}
+
+    for e in trace:
+        i = e.idx
+        instr = e.instr
+
+        # ---- work = fu latency + memory latency (>= 1 cycle occupancy) ----
+        fl = 0.0
+        if e.fu_name is not None:
+            fu: FunctionalUnit = ag.by_name[e.fu_name]
+            tags = instr.tags
+            fl = float(fu.latency.resolve(
+                operation=instr.operation,
+                words=int(tags.get("words", 1)),
+                macs=int(tags.get("macs", tags.get("words", 1)))))
+        ml = float(e.mem_latency)
+        fu_lat_arr[i] = fl
+        mem_lat_arr[i] = ml
+        work[i] = max(1.0, fl + ml)
+
+        # ---- base = fetch visibility + route buffer latencies ----
+        route_lat = 0.0
+        for sname in e.route[:-1]:
+            stage = ag.by_name[sname]
+            route_lat += float(stage.latency.resolve())
+        route_lat_arr[i] = route_lat
+        base[i] = visible[i] + route_lat
+
+        # ---- data dependencies ----
+        for j in e.deps:
+            preds[i].append((j, 0.0))
+
+        # ---- structural: same FunctionalUnit / terminal stage serialize ----
+        if e.fu_name is not None:
+            j = last_on_unit.get(e.fu_name)
+            if j is not None:
+                preds[i].append((j, 0.0))
+            last_on_unit[e.fu_name] = i
+        if e.route:
+            stage_name = e.route[-1]
+            j = last_on_stage.get(stage_name)
+            if j is not None and all(p != j for p, _ in preds[i]):
+                preds[i].append((j, 0.0))
+            last_on_stage[stage_name] = i
+
+        # ---- storage request-slot queueing records ----
+        for st_name, lat in e.mem_parts:
+            st = ag.by_name[st_name]
+            storage_nodes.setdefault(st_name, []).append(i)
+            storage_lat.setdefault(st_name, []).append(float(lat))
+            storage_slots[st_name] = max(1, st.max_concurrent_requests)
+            mem_words[i] = float(instr.tags.get("words", 1))
+
+        # ---- issue-buffer backpressure (approximation) ----
+        if include_buffer_edges and i - ibs >= 0:
+            preds[i].append((i - ibs, 0.0))
+
+        # ---- DSE metadata ----
+        key = (instr.operation if e.fu_name is None
+               else f"{instr.operation}@{_unit_class(e.fu_name)}")
+        op_class[i] = classes.setdefault(key, len(classes))
+        tags = instr.tags
+        op_scale[i] = float(tags.get("macs", tags.get("words", 1)))
+
+    # branch bubbles: every instruction of group g+1 waits for the pc-writer
+    # closing group g to resolve, then a fetch + route refill
+    for gi in range(len(groups) - 1):
+        tail = groups[gi][-1]
+        if trace[tail].is_pc_writer:
+            for idx in groups[gi + 1]:
+                preds[idx].append((tail, fetch_cost + route_lat_arr[idx]))
+
+    # pad to (n, MAX_PREDS), keeping the *latest* predecessors (they bind)
+    pred_arr = np.full((n, MAX_PREDS), -1, dtype=np.int32)
+    pred_extra = np.zeros((n, MAX_PREDS), dtype=np.float32)
+    overflow = 0
+    for i, ps in enumerate(preds):
+        dedup: Dict[int, float] = {}
+        for j, d in ps:
+            dedup[j] = max(dedup.get(j, -1.0), d)
+        items = sorted(dedup.items(), key=lambda kv: -kv[0])[:MAX_PREDS]
+        if len(dedup) > MAX_PREDS:
+            overflow += 1
+        for k, (j, d) in enumerate(items):
+            pred_arr[i, k] = j
+            pred_extra[i, k] = d
+
+    return AIDG(n=n, work=work, fu_lat=fu_lat_arr, mem_lat=mem_lat_arr,
+                base=base, preds=pred_arr, pred_extra=pred_extra,
+                storage_nodes={k: np.asarray(v, dtype=np.int64)
+                               for k, v in storage_nodes.items()},
+                storage_lat={k: np.asarray(v, dtype=np.float32)
+                             for k, v in storage_lat.items()},
+                storage_slots=storage_slots,
+                op_class=op_class, op_scale=op_scale, mem_words=mem_words,
+                classes=classes,
+                stats={"groups": len(groups), "pred_overflow": overflow,
+                       "fetch_cost": fetch_cost})
+
+
+def _unit_class(fu_name: str) -> str:
+    """Collapse template-replicated units (fu[0][1], lsu3) to a class name
+    so DSE parameters are shared across identical units."""
+    import re
+
+    return re.sub(r"\d+", "#", fu_name)
+
+
+def longest_path(aidg: AIDG, work: Optional[np.ndarray] = None,
+                 base: Optional[np.ndarray] = None) -> np.ndarray:
+    """Exact O(E) forward relaxation over the forward DAG (no storage
+    queueing): t_i = w_i + max(base_i, max_j (t_j + d_ji))."""
+    w = aidg.work if work is None else work
+    b = aidg.base if base is None else base
+    t = np.zeros(aidg.n, dtype=np.float64)
+    preds = aidg.preds
+    extra = aidg.pred_extra
+    for i in range(aidg.n):
+        m = b[i]
+        row = preds[i]
+        for k in range(row.shape[0]):
+            j = row[k]
+            if j < 0:
+                break
+            v = t[j] + extra[i, k]
+            if v > m:
+                m = v
+        t[i] = m + w[i]
+    return t
+
+
+def longest_path_fixed_point(aidg: AIDG, n_iters: int = 3,
+                             work: Optional[np.ndarray] = None,
+                             base: Optional[np.ndarray] = None,
+                             storage_lat: Optional[Dict[str, np.ndarray]] = None,
+                             ) -> np.ndarray:
+    """Forward relaxation + arrival-ordered request-slot queueing, iterated
+    to a fixed point (paper [16]).
+
+    Each outer iteration: (1) exact longest path over the forward DAG with
+    the current per-node base offsets; (2) replay every storage's accesses in
+    estimated-arrival order against its ``max_concurrent_requests`` slots;
+    (3) fold each access's service-completion (+ its unit latency) back into
+    the node's base.  Stops early when the makespan is stable.
+    """
+    import heapq
+
+    w = aidg.work if work is None else work
+    b0 = aidg.base if base is None else base
+    slat = aidg.storage_lat if storage_lat is None else storage_lat
+    b = b0.astype(np.float64).copy()
+    t = longest_path(aidg, work=w, base=b)
+    if not aidg.storage_nodes:
+        return t
+    prev_makespan = t.max() if aidg.n else 0.0
+    for _ in range(n_iters):
+        b = b0.astype(np.float64).copy()
+        for st_name, nodes in aidg.storage_nodes.items():
+            lats = slat[st_name]
+            slots = aidg.storage_slots[st_name]
+            # arrival = when the unit would issue the transaction
+            arrival = t[nodes] - w[nodes]
+            order = np.argsort(arrival, kind="stable")
+            heap = [0.0] * slots
+            heapq.heapify(heap)
+            for k in order:
+                i = int(nodes[k])
+                begin = max(float(arrival[k]), heapq.heappop(heap))
+                done = begin + float(lats[k])
+                heapq.heappush(heap, done)
+                # t_i >= done + fu_lat_i  ->  base_i >= done + fu - w
+                need = done + aidg.fu_lat[i] - w[i]
+                if need > b[i]:
+                    b[i] = need
+        t = longest_path(aidg, work=w, base=b)
+        makespan = t.max()
+        if abs(makespan - prev_makespan) < 0.5:
+            break
+        prev_makespan = makespan
+    return t
+
+
+def estimate_cycles(ag: ArchitectureGraph, program: Sequence[Any],
+                    entry: int = 0, n_iters: int = 3) -> Tuple[float, AIDG]:
+    """Trace + AIDG + fixed-point longest path -> estimated cycles (the
+    paper's fast performance estimation)."""
+    trace = build_trace(ag, program, entry)
+    aidg = build_aidg(ag, trace)
+    t = longest_path_fixed_point(aidg, n_iters=n_iters)
+    return (float(t.max()) if aidg.n else 0.0), aidg

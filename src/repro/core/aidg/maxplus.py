@@ -1,0 +1,208 @@
+"""Max-plus evaluation of the AIDG in JAX (the TPU-native adaptation).
+
+Two evaluators of the same recurrence  t_i = w_i + max(base_i, max_j (t_j + d_ji)):
+
+* ``longest_path_scan`` — exact forward pass as a ``jax.lax.scan`` over
+  nodes with padded predecessor gathers.  Differentiable in the latency
+  parameters and ``vmap``-able over parameter batches (the DSE fast path).
+* ``longest_path_blocked`` — the AIDG adjacency banded into dense blocks;
+  each block solved by the max-plus Kleene closure  t_b = M*_b ⊗ h_b  with
+  M* computed by repeated max-plus squaring — the matmul-shaped formulation
+  the ``repro.kernels.maxplus`` Pallas kernel accelerates on the MXU-aligned
+  layout (max/add on the VPU instead of mul/add on the MXU).
+
+The storage request-slot queueing (arrival-ordered service, Figs. 12/13) is
+``slot_queue_scan``: per storage, accesses sorted by arrival relax against a
+sorted slot vector via ``lax.scan`` — also vmappable over parameters.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .builder import AIDG
+
+__all__ = [
+    "longest_path_scan",
+    "longest_path_blocked",
+    "slot_queue_scan",
+    "fixed_point_jax",
+]
+
+NEG = -1e18
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _scan_impl(n: int, work: jnp.ndarray, base: jnp.ndarray,
+               preds: jnp.ndarray, pred_extra: jnp.ndarray) -> jnp.ndarray:
+    """t_i = w_i + max(base_i, max_k t[preds_ik] + extra_ik), forward order."""
+
+    def step(t, i):
+        js = preds[i]
+        vals = jnp.where(js >= 0, t[jnp.maximum(js, 0)] + pred_extra[i], NEG)
+        m = jnp.maximum(base[i], vals.max())
+        t = t.at[i].set(m + work[i])
+        return t, ()
+
+    t0 = jnp.zeros((n,), dtype=jnp.float32)
+    t, _ = jax.lax.scan(step, t0, jnp.arange(n))
+    return t
+
+
+def longest_path_scan(aidg: AIDG, work: Optional[jnp.ndarray] = None,
+                      base: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    w = jnp.asarray(aidg.work if work is None else work, jnp.float32)
+    b = jnp.asarray(aidg.base if base is None else base, jnp.float32)
+    return _scan_impl(aidg.n, w, b, jnp.asarray(aidg.preds),
+                      jnp.asarray(aidg.pred_extra))
+
+
+# ---------------------------------------------------------------------------
+# blocked max-plus closure evaluation
+# ---------------------------------------------------------------------------
+
+
+def _block_matrices(aidg: AIDG, block: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Dense per-block edge matrices.
+
+    Returns (M_diag, M_sub, far_mask) where for each block b:
+    ``M_diag[b][i, j]`` is the weight of edge (local j -> local i) inside the
+    block (-inf if absent) *with w_i absorbed* (m_ij = d_ij + w_i), and
+    ``M_sub[b][i, j]`` the edges from the previous block.  Edges reaching
+    further back are returned as an explicit gather list folded into h.
+    """
+    n = aidg.n
+    nb = (n + block - 1) // block
+    Md = np.full((nb, block, block), NEG, dtype=np.float32)
+    Ms = np.full((nb, block, block), NEG, dtype=np.float32)
+    far: Dict[Tuple[int, int], float] = {}
+    for i in range(n):
+        bi, li = divmod(i, block)
+        for k in range(aidg.preds.shape[1]):
+            j = int(aidg.preds[i, k])
+            if j < 0:
+                break
+            wgt = float(aidg.pred_extra[i, k]) + float(aidg.work[i])
+            bj, lj = divmod(j, block)
+            if bj == bi:
+                Md[bi, li, lj] = max(Md[bi, li, lj], wgt)
+            elif bj == bi - 1:
+                Ms[bi, li, lj] = max(Ms[bi, li, lj], wgt)
+            else:
+                far[(i, j)] = max(far.get((i, j), NEG), wgt)
+    far_arr = np.asarray([(i, j, w) for (i, j), w in far.items()],
+                         dtype=np.float64).reshape(-1, 3)
+    return Md, Ms, far_arr
+
+
+def maxplus_matmul_jnp(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
+    """(A ⊗ B)_ij = max_k A_ik + B_kj (pure-jnp reference path)."""
+    return jnp.max(A[..., :, :, None] + B[..., None, :, :], axis=-2)
+
+
+def maxplus_closure(M: jnp.ndarray, steps: int,
+                    matmul=maxplus_matmul_jnp) -> jnp.ndarray:
+    """Kleene star M* = (I ⊕ M)^(2^steps) by repeated max-plus squaring."""
+    n = M.shape[-1]
+    eye = jnp.where(jnp.eye(n, dtype=bool), 0.0, NEG)
+    P = jnp.maximum(M, eye)
+    for _ in range(steps):
+        P = jnp.maximum(P, matmul(P, P))
+    return P
+
+
+def longest_path_blocked(aidg: AIDG, block: int = 128,
+                         matmul=maxplus_matmul_jnp) -> np.ndarray:
+    """Block-sequential evaluation: for each block b,
+    h_b = max(base+w, far-edge gathers, M_sub ⊗ t_{b-1}), t_b = M*_bb ⊗ h_b."""
+    n = aidg.n
+    nb = (n + block - 1) // block
+    Md, Ms, far = _block_matrices(aidg, block)
+    steps = int(np.ceil(np.log2(max(2, block))))
+    closures = jax.vmap(lambda M: maxplus_closure(M, steps, matmul))(
+        jnp.asarray(Md))
+    Ms_j = jnp.asarray(Ms)
+
+    pad = nb * block - n
+    base = np.pad(aidg.base.astype(np.float32), (0, pad), constant_values=NEG)
+    work = np.pad(aidg.work.astype(np.float32), (0, pad), constant_values=0.0)
+    h0 = (base + work).reshape(nb, block)
+
+    t = np.full(nb * block, NEG, dtype=np.float32)
+    mv = jax.jit(lambda M, v: jnp.max(M + v[None, :], axis=1))
+    for b in range(nb):
+        h = np.asarray(h0[b])
+        if b > 0:
+            prev = jnp.asarray(t[(b - 1) * block: b * block])
+            h = np.maximum(h, np.asarray(mv(Ms_j[b], prev)))
+        # far edges into this block (targets i in b, sources already final)
+        for i, j, wgt in far:
+            i = int(i)
+            if i // block == b:
+                li = i % block
+                h[li] = max(h[li], t[int(j)] + wgt)
+        tb = np.asarray(mv(closures[b], jnp.asarray(h)))
+        # closure includes the identity, so h itself is included
+        t[b * block: (b + 1) * block] = tb
+    return t[:n].astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# storage request-slot queueing in jnp (vmappable)
+# ---------------------------------------------------------------------------
+
+
+def slot_queue_scan(arrival: jnp.ndarray, lat: jnp.ndarray, slots: int
+                    ) -> jnp.ndarray:
+    """Service completion per access, arrival-ordered FIFO over ``slots``
+    request slots.  ``arrival``/``lat`` are in *arrival order*."""
+
+    def step(slot_free, inp):
+        arr, l = inp
+        begin = jnp.maximum(arr, slot_free[0])
+        done = begin + l
+        slot_free = jnp.sort(slot_free.at[0].set(done))
+        return slot_free, done
+
+    init = jnp.zeros((slots,), dtype=jnp.float32)
+    _, done = jax.lax.scan(step, init, (arrival, lat))
+    return done
+
+
+def fixed_point_jax(aidg: AIDG, n_iters: int = 3,
+                    work: Optional[jnp.ndarray] = None,
+                    base: Optional[jnp.ndarray] = None,
+                    storage_lat: Optional[Dict[str, jnp.ndarray]] = None,
+                    ) -> jnp.ndarray:
+    """JAX version of ``builder.longest_path_fixed_point`` — jit/vmap-able
+    over (work, base, storage latencies) for design-space exploration."""
+    w = jnp.asarray(aidg.work if work is None else work, jnp.float32)
+    b0 = jnp.asarray(aidg.base if base is None else base, jnp.float32)
+    preds = jnp.asarray(aidg.preds)
+    extra = jnp.asarray(aidg.pred_extra)
+    fu_lat = jnp.asarray(aidg.fu_lat, jnp.float32)
+    n = aidg.n
+
+    t = _scan_impl(n, w, b0, preds, extra)
+    if not aidg.storage_nodes:
+        return t
+    for _ in range(n_iters):
+        b = b0
+        for st_name, nodes in aidg.storage_nodes.items():
+            lats = jnp.asarray(
+                aidg.storage_lat[st_name] if storage_lat is None
+                else storage_lat[st_name], jnp.float32)
+            nd = jnp.asarray(nodes)
+            slots = aidg.storage_slots[st_name]
+            arrival = t[nd] - w[nd]
+            order = jnp.argsort(arrival)
+            done = slot_queue_scan(arrival[order], lats[order], slots)
+            need = done + fu_lat[nd[order]] - w[nd[order]]
+            b = b.at[nd[order]].max(need)
+        t = _scan_impl(n, w, b, preds, extra)
+    return t

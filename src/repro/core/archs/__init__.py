@@ -1,0 +1,27 @@
+"""Accelerator zoo: the paper's worked examples (OMA §4.1, systolic array
+§4.2, Γ̈ §4.3) plus the Eyeriss- and Plasticine-derived models referenced in
+§6 and the TPU-v5e-like model of this framework's target hardware."""
+
+from .oma import generate_oma, make_oma_ag, OMA_SCALAR_OPS
+from .systolic import (
+    FetchUnit,
+    LoadUnit,
+    ProcessingElement,
+    StoreUnit,
+    generate_systolic,
+    make_systolic_ag,
+)
+from .gamma import GammaComputeTemplate, generate_gamma, make_gamma_ag
+from .eyeriss import EyerissPE, generate_eyeriss, make_eyeriss_ag
+from .plasticine import generate_plasticine, make_plasticine_ag
+from .tpu_v5e import TPU_V5E, generate_tpu_v5e, make_tpu_v5e_ag
+
+__all__ = [
+    "generate_oma", "make_oma_ag", "OMA_SCALAR_OPS",
+    "ProcessingElement", "LoadUnit", "StoreUnit", "FetchUnit",
+    "generate_systolic", "make_systolic_ag",
+    "GammaComputeTemplate", "generate_gamma", "make_gamma_ag",
+    "EyerissPE", "generate_eyeriss", "make_eyeriss_ag",
+    "generate_plasticine", "make_plasticine_ag",
+    "TPU_V5E", "generate_tpu_v5e", "make_tpu_v5e_ag",
+]

@@ -1,0 +1,75 @@
+"""Blocked max-plus matmul Pallas kernel.
+
+The AIDG longest-path relaxation is a max-plus matmul (DESIGN.md §4):
+``(A ⊗ B)_ij = max_k (A_ik + B_kj)``.  The kernel tiles exactly like an MXU
+matmul — (8, 128)-aligned VMEM blocks, k-innermost grid accumulation — but
+reduces with max/add on the VPU instead of mul/add on the MXU.
+
+VMEM budget: the naive broadcast ``a[:, :, None] + b[None, :, :]`` would
+materialize a (bm, bk, bn) cube; instead the kernel walks the k block in
+``K_STEP``-deep slabs, keeping the working set at
+``bm*bk + bk*bn + bm*bn + K_STEP*bm*bn`` floats.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["maxplus_matmul_kernel", "maxplus_matmul_pallas"]
+
+NEG = -1e18
+K_STEP = 8  # k-slab depth per VPU step inside a block
+
+
+def maxplus_matmul_kernel(a_ref, b_ref, o_ref, *, bk: int):
+    """One (bm, bn) output tile, accumulating max over the k grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, NEG)
+
+    a = a_ref[...]            # (bm, bk)
+    b = b_ref[...]            # (bk, bn)
+
+    if bk % K_STEP == 0 and bk > K_STEP:
+        def body(s, acc):
+            # (bm, K_STEP, 1) + (1, K_STEP, bn) -> max over the slab axis
+            a_slab = jax.lax.dynamic_slice_in_dim(a, s * K_STEP, K_STEP, axis=1)
+            b_slab = jax.lax.dynamic_slice_in_dim(b, s * K_STEP, K_STEP, axis=0)
+            cand = jnp.max(a_slab[:, :, None] + b_slab[None, :, :], axis=1)
+            return jnp.maximum(acc, cand)
+
+        acc = jax.lax.fori_loop(0, bk // K_STEP, body,
+                                jnp.full(o_ref.shape, NEG, o_ref.dtype))
+    else:  # tiny-k fallback: single broadcast slab
+        acc = jnp.max(a[:, :, None] + b[None, :, :], axis=1)
+    o_ref[...] = jnp.maximum(o_ref[...], acc)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def maxplus_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, *,
+                          bm: int = 128, bk: int = 128, bn: int = 128,
+                          interpret: bool = True) -> jnp.ndarray:
+    """C = A ⊗ B for (M, K) ⊗ (K, N); shapes must divide the block sizes
+    (ops.pad_maxplus handles ragged shapes)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(maxplus_matmul_kernel, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))

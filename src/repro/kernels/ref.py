@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic reference the kernels are property-tested
+against (``tests/test_kernels.py`` sweeps shapes/dtypes and asserts
+allclose in ``interpret=True`` mode).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+__all__ = ["maxplus_matmul_ref", "gemm_ref", "flash_attention_ref",
+           "selective_scan_ref"]
+
+NEG = -1e18
+
+
+def maxplus_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(A ⊗ B)_ij = max_k (A_ik + B_kj) — max-plus semiring matmul."""
+    return jnp.max(a[..., :, :, None] + b[..., None, :, :], axis=-2)
+
+
+def gemm_ref(a: jnp.ndarray, b: jnp.ndarray, activation: int = 0,
+             out_dtype=jnp.float32) -> jnp.ndarray:
+    """C = act(A @ B) with f32 accumulation; activation 1 = ReLU (the Γ̈
+    ``gemm`` instruction's optional activation, paper Listing 4)."""
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if activation == 1:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(out_dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """Masked multi-head attention, (B, H, S, D) layout, f32 softmax."""
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qlen, klen = q.shape[-2], k.shape[-2]
+        mask = jnp.tril(jnp.ones((qlen, klen), dtype=bool), klen - qlen)
+        s = jnp.where(mask, s, NEG)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def selective_scan_ref(x, dt, b, c, a, d):
+    """Naive per-step selective scan: the Mamba-1 recurrence oracle.
+
+    x/dt: (B, S, D); b/c: (B, S, N); a: (D, N); d: (D,) -> (B, S, D)."""
+    import jax
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        dA = jnp.exp(dt_t[:, :, None] * a[None])
+        h = dA * h + (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t) + d[None] * x_t
+        return h, y
+
+    B, S, D = x.shape
+    N = b.shape[-1]
+    h0 = jnp.zeros((B, D, N), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)

@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # XLA:CPU's while-loop-invariant code motion hoists size-inflating
+    # converts (bf16 saved-activation stacks -> f32) out of scan loops;
+    # the TPU pipeline does not take such hoists.  Disable for parity so
+    # the dry-run's memory analysis reflects the TPU memory plan.
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion"
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) cell against the production mesh and record memory / cost /
+collective analyses (EXPERIMENTS.md §Dry-run).
+
+The two lines above MUST stay the first statements of this module: jax
+locks the device count on first initialization.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out experiments/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --arch jamba-v0.1-52b \
+        --shape decode_32k --mesh single
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from .. import pspec
+from ..configs import ALIASES, all_arch_ids, get_config
+from ..models import SHAPES, cell_is_runnable, get_model, input_specs
+from ..models.config import ModelConfig, ShapeConfig
+from .mesh import make_production_mesh
+from .sharding import (batch_axes, cache_specs, input_specs_sharding,
+                       named, param_specs)
+from .steps import abstract_train_state, make_decode_step, make_prefill_step, \
+    make_train_step
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def count_collectives(hlo: str):
+    out = {}
+    for m in re.finditer(r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                         r"collective-permute)(?:-start|-done)?\b", hlo):
+        out[m.group(1)] = out.get(m.group(1), 0) + 1
+    return out
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, donate: bool = True):
+    """Build + lower + compile one cell; returns the analysis record."""
+    with pspec.activation_mesh(mesh):
+        return _lower_cell_inner(cfg, shape, mesh, donate)
+
+
+def _lower_cell_inner(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                      donate: bool = True):
+    model = get_model(cfg)
+    specs = input_specs(cfg, shape)
+    in_sh = input_specs_sharding(mesh, specs)
+    t0 = time.time()
+
+    if shape.mode == "train":
+        params, opt_state = abstract_train_state(cfg)
+        p_sh = param_specs(mesh, params)
+        o_sh = jax.tree.map(lambda _: None, opt_state)
+        # m/v inherit the weight spec; step scalar replicated
+        o_sh = {"step": NamedSharding(mesh, P()),
+                "m": jax.tree.map(lambda s: s, p_sh),
+                "v": jax.tree.map(lambda s: s, p_sh)}
+        step = make_train_step(cfg)
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, o_sh, in_sh),
+                         donate_argnums=(0, 1) if donate else ())
+        lowered = jitted.lower(params, opt_state, specs)
+    elif shape.mode == "prefill":
+        params = model.abstract_params()
+        p_sh = param_specs(mesh, params)
+        cache = jax.eval_shape(lambda: model.init_cache(shape.global_batch,
+                                                        shape.seq_len))
+        c_sh = cache_specs(mesh, cfg, cache, shape)
+        step = make_prefill_step(cfg)
+        jitted = jax.jit(step, in_shardings=(p_sh, c_sh, in_sh),
+                         donate_argnums=(1,) if donate else ())
+        lowered = jitted.lower(params, cache, specs)
+    else:  # decode
+        params = model.abstract_params()
+        p_sh = param_specs(mesh, params)
+        cache = jax.eval_shape(lambda: model.init_cache(shape.global_batch,
+                                                        shape.seq_len))
+        c_sh = cache_specs(mesh, cfg, cache, shape)
+        step = make_decode_step(cfg)
+        jitted = jax.jit(step, in_shardings=(p_sh, c_sh, in_sh["token"]),
+                         donate_argnums=(1,) if donate else ())
+        lowered = jitted.lower(params, cache, specs["token"])
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    hlo = compiled.as_text()
+    from .roofline import parse_collective_bytes, parse_dot_flops
+    coll = parse_collective_bytes(hlo)
+    dot_flops = parse_dot_flops(hlo)
+    rec = {
+        "arch": cfg.arch_id,
+        "shape": shape.name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "mode": shape.mode,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        },
+        "flops_per_device": ca.get("flops"),
+        "dot_flops_per_device": dot_flops,
+        "bytes_per_device": ca.get("bytes accessed"),
+        "transcendentals": ca.get("transcendentals"),
+        "collective_counts": count_collectives(hlo),
+        "collective_bytes": coll,
+        "collective_bytes_total": sum(v["bytes"] for v in coll.values()),
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+        "hlo_bytes": len(hlo),
+    }
+    return rec, compiled, lowered
+
+
+def run_cells(arch_ids, shape_names, meshes, out_dir: Path, force: bool = False):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    results = []
+    for aid in arch_ids:
+        cfg = get_config(aid)
+        for sname in shape_names:
+            shape = SHAPES[sname]
+            ok, why = cell_is_runnable(cfg, shape)
+            for mesh_name in meshes:
+                tag = f"{ALIASES.get(aid, aid)}__{sname}__{mesh_name}"
+                path = out_dir / f"{tag}.json"
+                if path.exists() and not force:
+                    results.append(json.loads(path.read_text()))
+                    print(f"[cached] {tag}")
+                    continue
+                if not ok:
+                    rec = {"arch": cfg.arch_id, "shape": sname,
+                           "mesh": mesh_name, "skipped": why}
+                    path.write_text(json.dumps(rec, indent=1))
+                    print(f"[skip]   {tag}: {why}")
+                    results.append(rec)
+                    continue
+                mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+                t0 = time.time()
+                try:
+                    rec, compiled, lowered = lower_cell(cfg, shape, mesh)
+                    print(f"[ok]     {tag}: compile {rec['compile_s']}s "
+                          f"temp {rec['memory']['temp_bytes']/2**30:.2f} GiB/dev")
+                except Exception as e:  # noqa: BLE001 - record and continue
+                    rec = {"arch": cfg.arch_id, "shape": sname,
+                           "mesh": mesh_name, "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:],
+                           "elapsed_s": round(time.time() - t0, 1)}
+                    print(f"[FAIL]   {tag}: {type(e).__name__}: {e}")
+                path.write_text(json.dumps(rec, indent=1))
+                results.append(rec)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = all_arch_ids() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    results = run_cells(archs, shapes, meshes, Path(args.out),
+                        force=args.force)
+    n_ok = sum("memory" in r for r in results)
+    n_skip = sum("skipped" in r for r in results)
+    n_fail = sum("error" in r for r in results)
+    print(f"\n=== dry-run: {n_ok} ok, {n_skip} skipped (by rule), {n_fail} FAILED ===")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model") — FSDP over
+``data`` (params/optimizer sharded, all-gather on use), TP/EP over
+``model`` (heads, d_ff, experts, decode-cache sequence).
+
+Multi-pod: (2, 16, 16) = 512 chips, leading ``pod`` axis = pure data
+parallelism across pods (gradient all-reduce over DCN, optionally
+compressed — repro.optim.compress).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "mesh_axis_sizes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over the locally available devices (tests/examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

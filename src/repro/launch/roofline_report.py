@@ -1,0 +1,91 @@
+"""Roofline report: read the dry-run JSONs and emit the §Roofline table.
+
+    PYTHONPATH=src python -m repro.launch.roofline_report \
+        --dryrun experiments/dryrun --mesh single --markdown
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from ..models import SHAPES
+from .roofline import HW_V5E, RooflineCell, roofline_terms
+
+
+def load_cells(dryrun_dir: Path, mesh: str = "single") -> List[Dict]:
+    out = []
+    for p in sorted(dryrun_dir.glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        if "memory" in r:
+            out.append(r)
+    return out
+
+
+def analyze(rec: Dict) -> Optional[RooflineCell]:
+    """Roofline terms for one dry-run record.
+
+    FLOPs: the trip-aware HLO dot walk (``dot_flops_per_device``) — XLA:CPU
+    cost_analysis counts while bodies once, so its raw "flops" undercounts
+    scanned layers.  Bytes: cost_analysis bytes scaled by the same trip
+    correction (flops_walk / flops_ca), since both live in the same loop
+    bodies.  Collectives: the trip-aware HLO parser (per-device bytes).
+    """
+    ca_flops = rec.get("flops_per_device") or 0.0
+    flops = rec.get("dot_flops_per_device") or ca_flops
+    trip_corr = flops / max(ca_flops, 1.0)
+    hbm = (rec.get("bytes_per_device") or 0.0) * max(1.0, trip_corr)
+    coll = rec.get("collective_bytes_total") or 0.0
+    shape = SHAPES[rec["shape"]]
+    tokens = (shape.global_batch if shape.mode == "decode"
+              else shape.global_batch * shape.seq_len)
+    mult = 3 if shape.mode == "train" else 1
+    n_chips = 512 if rec["mesh"] in ("multi", "2x16x16") else 256
+    model_flops = 2.0 * mult * rec["n_active_params"] * tokens / n_chips
+    t = roofline_terms(flops, hbm, coll)
+    # decode: mandatory traffic = params + cache streamed once per token
+    mandatory_s = (rec.get("memory", {}).get("argument_bytes", 0)
+                   / 819e9)
+    cell = RooflineCell(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=t["compute_s"], memory_s=t["memory_s"],
+        collective_s=t["collective_s"],
+        model_flops=model_flops, hlo_flops=flops,
+        useful_ratio=model_flops / max(flops, 1e-30))
+    cell.mandatory_memory_s = mandatory_s  # type: ignore[attr-defined]
+    return cell
+
+
+def table(cells: List[RooflineCell], markdown: bool = True) -> str:
+    hdr = ["arch", "shape", "compute_s", "memory_s", "collective_s",
+           "bound", "roofline_frac", "useful_flops_ratio"]
+    rows = []
+    for c in cells:
+        rows.append([c.arch, c.shape, f"{c.compute_s:.4g}",
+                     f"{c.memory_s:.4g}", f"{c.collective_s:.4g}",
+                     c.dominant, f"{c.roofline_fraction:.3f}",
+                     f"{c.useful_ratio:.3f}"])
+    if markdown:
+        lines = ["| " + " | ".join(hdr) + " |",
+                 "|" + "|".join(["---"] * len(hdr)) + "|"]
+        lines += ["| " + " | ".join(r) + " |" for r in rows]
+        return "\n".join(lines)
+    lines = [",".join(hdr)] + [",".join(r) for r in rows]
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    recs = load_cells(Path(args.dryrun), args.mesh)
+    cells = [analyze(r) for r in recs]
+    print(table([c for c in cells if c], markdown=args.markdown))
+
+
+if __name__ == "__main__":
+    main()

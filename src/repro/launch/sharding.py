@@ -1,0 +1,191 @@
+"""Sharding rules: parameter / input / cache PartitionSpecs per (arch,
+shape, mesh).
+
+Strategy (DESIGN.md §6):
+* ``pod``   — pure DP: params replicated across pods, batch sharded.
+* ``data``  — FSDP: the non-TP dimension of every weight matrix is sharded
+  over ``data``; optimizer state inherits the weight's spec (ZeRO).
+* ``model`` — TP: attention heads / d_ff / experts / mamba d_inner; for
+  decode shapes additionally the KV-cache sequence dimension (sequence-
+  parallel cache — scores reduce over a sharded axis, XLA inserts the
+  softmax partial-reduction collectives).
+
+Every rule is divisibility-guarded: an axis that does not divide the
+dimension is dropped (never pad-shard), so the same rules serve full-size
+and smoke configs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig, ShapeConfig
+
+__all__ = ["param_specs", "input_specs_sharding", "cache_specs",
+           "batch_axes", "named", "guard_spec"]
+
+
+def _axis_size(mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([_axis_size(mesh, n) for n in name]))
+    return mesh.shape[name]
+
+
+def guard_spec(mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    """Drop spec axes that don't divide the corresponding dim."""
+    out = []
+    for dim, names in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if names is None:
+            out.append(None)
+            continue
+        cand = names if isinstance(names, tuple) else (names,)
+        kept = []
+        size = 1
+        for n in cand:
+            s = _axis_size(mesh, n)
+            if dim % (size * s) == 0:
+                kept.append(n)
+                size *= s
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def named(mesh, spec: P, shape: Tuple[int, ...]) -> NamedSharding:
+    return NamedSharding(mesh, guard_spec(mesh, spec, shape))
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules (keyed by leaf name, stacked leading layer dim ignored)
+# ---------------------------------------------------------------------------
+
+# name -> spec for the *trailing* dims (leading stacked dims -> None)
+_RULES: Dict[str, Tuple[Optional[Any], ...]] = {
+    # embeddings
+    "embed": ("model", "data"),
+    "unembed": ("data", "model"),
+    "patch_proj": ("data", "model"),
+    "dec_pos": (None, "data"),
+    "enc_pos": (None, None),
+    # attention (col-parallel in, row-parallel out)
+    "wq": ("data", "model"),
+    "wk": ("data", "model"),
+    "wv": ("data", "model"),
+    "wo": ("model", "data"),
+    # MLA
+    "wdq": ("data", "model"),
+    "wuq": ("model", None),       # (q_lora, H*qk): H over model would be 2nd
+    "wdkv": ("data", None),
+    "wkr": ("data", None),
+    "wuk": ("model", None, None),  # (H, rank, hd)
+    "wuv": ("model", None, None),
+    # MLP
+    "w_gate": ("data", "model"),
+    "w_up": ("data", "model"),
+    "w_down": ("model", "data"),
+    # MoE (leading E dim)
+    "router": ("data", None),
+    # mamba
+    "in_proj": ("data", "model"),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    "x_proj": ("model", None),
+    "dt_proj": (None, "model"),
+    "dt_bias": ("model",),
+    "A_log": ("model", None),
+    "D": ("model",),
+    "out_proj": ("model", "data"),
+    # norms
+    "scale": (None,),
+    "bias": (None,),
+}
+
+# MoE expert tensors carry a leading E dim that shards over `model`
+_MOE_EXPERT_RULES: Dict[str, Tuple[Optional[Any], ...]] = {
+    "w_gate": ("model", "data", None),
+    "w_up": ("model", "data", None),
+    "w_down": ("model", None, "data"),
+}
+
+
+def _leaf_spec(path, leaf) -> Tuple[Optional[Any], ...]:
+    names = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+    name = str(names[-1])
+    shape = leaf.shape
+    in_moe = any(str(n) == "ffn" for n in names) and name in _MOE_EXPERT_RULES \
+        and len(shape) >= 3
+    # distinguish MoE expert weights (R, E, d, f) from MLP (R, d, f) by rank
+    if in_moe and len(shape) == 4:
+        trail = _MOE_EXPERT_RULES[name]
+    elif name in _RULES:
+        trail = _RULES[name]
+    else:
+        trail = ()
+    lead = len(shape) - len(trail)
+    if lead < 0:  # unstacked variant (e.g. whisper top-level embed)
+        trail = trail[-len(shape):] if len(shape) else ()
+        lead = len(shape) - len(trail)
+    return (None,) * lead + tuple(trail)
+
+
+def param_specs(mesh, abstract_params) -> Any:
+    """Pytree of NamedShardings matching the abstract params."""
+
+    def f(path, leaf):
+        spec = P(*_leaf_spec(path, leaf))
+        return named(mesh, spec, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(f, abstract_params)
+
+
+# ---------------------------------------------------------------------------
+# inputs and caches
+# ---------------------------------------------------------------------------
+
+
+def input_specs_sharding(mesh, specs: Dict[str, Any]) -> Dict[str, Any]:
+    """Batch-shard every input over (pod, data)."""
+    ba = batch_axes(mesh)
+    out = {}
+    for k, v in specs.items():
+        spec = P(ba) if v.shape[0] > 1 else P()
+        out[k] = named(mesh, spec, v.shape)
+    return out
+
+
+def cache_specs(mesh, cfg: ModelConfig, abstract_cache, shape: ShapeConfig):
+    """Decode caches: batch over (pod, data) when divisible; the cache
+    sequence dim over ``model`` (sequence-parallel KV).  For B == 1
+    (long_500k) the sequence dim takes (data, model)."""
+    ba = batch_axes(mesh)
+    B = shape.global_batch
+    seq_axes = ("model",) if B > 1 else ("data", "model")
+
+    def f(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in path]
+        name = names[-1] if names else ""
+        shp = leaf.shape
+        if name in ("k", "v"):          # (R, B, T, KV, hd)
+            return named(mesh, P(None, ba, seq_axes, None, None), shp)
+        if name in ("c_kv", "k_rope"):  # (R, B, T, rank)
+            return named(mesh, P(None, ba, seq_axes, None), shp)
+        if name in ("cross_k", "cross_v"):  # (L, B, T_enc, H, hd)
+            return named(mesh, P(None, ba, None, "model", None), shp)
+        if name == "conv":              # (R, B, dc-1, di)
+            return named(mesh, P(None, ba, None, "model"), shp)
+        if name == "h":                 # (R, B, di, N)
+            return named(mesh, P(None, ba, "model", None), shp)
+        if name == "kpos":              # (R, T)
+            return named(mesh, P(None, seq_axes), shp)
+        return named(mesh, P(), shp)
+
+    return jax.tree_util.tree_map_with_path(f, abstract_cache)

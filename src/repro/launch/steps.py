@@ -1,0 +1,110 @@
+"""Step builders: train_step / prefill_step / decode_step per config.
+
+These close over the ModelConfig (static) and take only arrays, so a
+single ``jax.jit`` per (arch × shape × mesh) cell covers the whole step —
+the unit the dry-run lowers and the roofline analyses.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import get_model
+from ..models.config import ModelConfig
+from ..optim import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["cross_entropy", "make_loss_fn", "make_train_step",
+           "make_prefill_step", "make_decode_step", "init_train_state"]
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def make_loss_fn(cfg: ModelConfig, remat: bool = True) -> Callable:
+    model = get_model(cfg)
+
+    def loss_fn(params, batch: Dict[str, Any]):
+        logits, aux = model.logits_and_aux(params, batch, remat=remat)
+        if cfg.n_patches:  # VLM: patch prefix carries no LM loss
+            logits = logits[:, cfg.n_patches:]
+        loss = cross_entropy(logits, batch["labels"])
+        return loss + aux, {"loss": loss, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: Optional[AdamWConfig] = None,
+                    remat: bool = True) -> Callable:
+    opt = opt or AdamWConfig()
+    loss_fn = make_loss_fn(cfg, remat=remat)
+    n_micro = max(1, cfg.train_microbatches)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            # gradient accumulation: scan over microbatches; every
+            # activation-linked buffer scales with B / n_micro
+            micro = jax.tree.map(
+                lambda a: a.reshape((n_micro, a.shape[0] // n_micro)
+                                    + a.shape[1:]), batch)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = grads_of(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
+                              params)
+            (grads, loss), ms = jax.lax.scan(acc_step, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+            metrics = jax.tree.map(lambda a: a[-1], ms)
+        params, opt_state, opt_metrics = adamw_update(opt, params, grads,
+                                                      opt_state)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, key) -> Tuple[Any, Any]:
+    model = get_model(cfg)
+    params = model.init_params(key)
+    return params, adamw_init(params)
+
+
+def abstract_train_state(cfg: ModelConfig) -> Tuple[Any, Any]:
+    model = get_model(cfg)
+    params = model.abstract_params()
+    opt_state = jax.eval_shape(adamw_init, params)
+    return params, opt_state
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    model = get_model(cfg)
+
+    def prefill_step(params, cache, batch):
+        return model.prefill(params, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    model = get_model(cfg)
+
+    def decode_step(params, cache, token):
+        return model.decode_step(params, token, cache)
+
+    return decode_step

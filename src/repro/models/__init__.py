@@ -1,0 +1,11 @@
+"""Model zoo: the 10 assigned architectures under one config schema."""
+
+from .api import Model, cell_is_runnable, get_model, input_specs
+from .config import (AttentionConfig, EncDecConfig, ModelConfig, MoEConfig,
+                     SHAPES, ShapeConfig, SSMConfig)
+
+__all__ = [
+    "Model", "get_model", "input_specs", "cell_is_runnable",
+    "ModelConfig", "AttentionConfig", "MoEConfig", "SSMConfig",
+    "EncDecConfig", "SHAPES", "ShapeConfig",
+]

@@ -1,0 +1,122 @@
+"""Unified model API — family dispatch + input specs for every (arch ×
+shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of the given shape cell (weak-type-correct, shardable, no
+device allocation) — the dry-run contract.  ``[audio]``/``[vlm]`` stubs:
+frames/patches arrive as precomputed embeddings.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, lm
+from .config import ModelConfig, ShapeConfig
+
+__all__ = ["Model", "get_model", "input_specs", "cell_is_runnable"]
+
+
+class Model:
+    """Thin dispatcher: decoder-only LMs via ``lm``, whisper via ``encdec``."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.is_encdec = cfg.enc_dec is not None
+
+    # -- params ---------------------------------------------------------------
+    def init_params(self, key):
+        if self.is_encdec:
+            return encdec.init_params_encdec(self.cfg, key)
+        return lm.init_params(self.cfg, key)
+
+    def abstract_params(self):
+        if self.is_encdec:
+            return encdec.abstract_params_encdec(self.cfg)
+        return lm.abstract_params(self.cfg)
+
+    # -- forward --------------------------------------------------------------
+    def logits(self, params, batch: Dict[str, Any], remat: bool = True):
+        cfg = self.cfg
+        if self.is_encdec:
+            return encdec.forward_encdec(params, cfg, batch["tokens"],
+                                         batch["frames"])
+        return lm.forward(params, cfg, batch["tokens"],
+                          patches=batch.get("patches"), remat=remat)
+
+    def logits_and_aux(self, params, batch: Dict[str, Any], remat: bool = True):
+        cfg = self.cfg
+        if self.is_encdec:
+            lg = encdec.forward_encdec(params, cfg, batch["tokens"],
+                                       batch["frames"])
+            return lg, jnp.zeros((), jnp.float32)
+        return lm.forward_with_aux(params, cfg, batch["tokens"],
+                                   patches=batch.get("patches"), remat=remat)
+
+    # -- serving ----------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        if self.is_encdec:
+            return encdec.init_cache_encdec(self.cfg, batch, max_len)
+        return lm.init_cache(self.cfg, batch, max_len)
+
+    def prefill(self, params, batch: Dict[str, Any], cache):
+        if self.is_encdec:
+            return encdec.prefill_encdec(params, self.cfg, batch["tokens"],
+                                         batch["frames"], cache)
+        return lm.prefill(params, self.cfg, batch["tokens"], cache,
+                          patches=batch.get("patches"))
+
+    def decode_step(self, params, token, cache):
+        if self.is_encdec:
+            return encdec.decode_step_encdec(params, self.cfg, token, cache)
+        return lm.decode_step(params, self.cfg, token, cache)
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Shape-cell applicability (DESIGN.md §Shape-cell skips).
+
+    long_500k needs sub-quadratic attention: runs for ssm / hybrid / SWA,
+    skipped for pure full-attention archs.
+    """
+    if shape.name == "long_500k":
+        subquadratic = (cfg.family in ("ssm", "hybrid")
+                        or cfg.attention.window > 0)
+        if not subquadratic:
+            return False, ("pure full-attention arch: 500k dense KV decode "
+                           "is excluded by the assignment's skip rule")
+    if cfg.enc_dec is not None and shape.seq_len > cfg.max_seq_len:
+        return False, f"decoder positions capped at {cfg.max_seq_len}"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step function's data inputs."""
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.mode in ("train", "prefill"):
+        n_text = S - cfg.n_patches if cfg.n_patches else S
+        specs: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((B, n_text), i32),
+        }
+        if shape.mode == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, n_text), i32)
+        if cfg.n_patches:
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), bf16)
+        if cfg.enc_dec is not None:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_dec.encoder_len, cfg.d_model), bf16)
+        return specs
+
+    # decode: one new token against a seq_len-deep cache
+    return {"token": jax.ShapeDtypeStruct((B, 1), i32)}

@@ -1,0 +1,254 @@
+"""Whisper-style encoder-decoder (whisper-small backbone).
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` feeds
+precomputed frame embeddings (B, encoder_len, d_model) — the two stride-2
+convs of real Whisper produce exactly this (1500 frames for 30 s audio).
+
+Encoder: bidirectional attention over frames, sinusoidal positions.
+Decoder: causal self-attention + cross-attention over encoder output,
+learned positional embeddings, non-gated GELU MLPs (Whisper's geometry).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .. import pspec
+from . import layers as L
+from .layers import init_norm, norm
+from .lm import cast_tree, _dtype
+
+__all__ = ["init_params_encdec", "abstract_params_encdec", "encode",
+           "forward_encdec", "init_cache_encdec", "prefill_encdec",
+           "decode_step_encdec"]
+
+
+def _sinusoidal(length: int, d: int) -> np.ndarray:
+    pos = np.arange(length)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / np.power(10_000.0, dim / d)
+    out = np.zeros((length, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out
+
+
+def _init_xattn(key, cfg, d, dtype):
+    a = cfg.attention
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": jax.random.normal(ks[0], (d, a.n_heads * a.head_dim), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, a.n_heads * a.head_dim), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, a.n_heads * a.head_dim), dtype) * s,
+        "wo": jax.random.normal(ks[3], (a.n_heads * a.head_dim, d), dtype) * s,
+    }
+
+
+def init_params_encdec(cfg: ModelConfig, key: jax.Array) -> Dict:
+    dtype = _dtype(cfg.param_dtype)
+    d = cfg.d_model
+    e = cfg.enc_dec
+    keys = jax.random.split(key, 8)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": init_norm("layernorm", d, dtype),
+                "attn": L.init_attention(k1, cfg.attention, d, dtype),
+                "ln2": init_norm("layernorm", d, dtype),
+                "mlp": L.init_mlp(k2, d, cfg.d_ff, dtype, gated=False)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": init_norm("layernorm", d, dtype),
+                "self": L.init_attention(k1, cfg.attention, d, dtype),
+                "lnx": init_norm("layernorm", d, dtype),
+                "cross": _init_xattn(k2, cfg, d, dtype),
+                "ln2": init_norm("layernorm", d, dtype),
+                "mlp": L.init_mlp(k3, d, cfg.d_ff, dtype, gated=False)}
+
+    enc_ks = jax.random.split(keys[0], e.n_encoder_layers)
+    dec_ks = jax.random.split(keys[1], cfg.n_layers)
+    return {
+        "enc_pos": jnp.asarray(_sinusoidal(e.encoder_len, d), dtype),
+        "enc_blocks": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[enc_layer(k) for k in enc_ks]),
+        "enc_norm": init_norm("layernorm", d, dtype),
+        "embed": jax.random.normal(keys[2], (cfg.vocab_size, d), dtype) * d ** -0.5,
+        "dec_pos": jax.random.normal(
+            keys[3], (min(cfg.max_seq_len, 32768), d), dtype) * 0.02,
+        "dec_blocks": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[dec_layer(k) for k in dec_ks]),
+        "final_norm": init_norm("layernorm", d, dtype),
+    }
+
+
+def abstract_params_encdec(cfg: ModelConfig) -> Dict:
+    return jax.eval_shape(partial(init_params_encdec, cfg), jax.random.key(0))
+
+
+def _self_attn(lp, x, cfg, positions, cache=None):
+    # whisper uses no RoPE; positions only index caches.  Reuse the GQA block
+    # with theta-> identity by passing positions of zeros (rope(0) = id).
+    zero_pos = jnp.zeros_like(positions)
+    return L.attention_block(lp, x, cfg.attention, positions=zero_pos,
+                             causal=cache is not None or True,
+                             cache=cache, impl="chunked", chunk=1024)
+
+
+def _cross_attn(lp, x, enc_k, enc_v, cfg):
+    a = cfg.attention
+    b, s, _ = x.shape
+    q = (x @ lp["wq"]).reshape(b, s, a.n_heads, a.head_dim)
+    out = L.dense_attention(q, enc_k, enc_v, causal=False)
+    return out.reshape(b, s, a.n_heads * a.head_dim) @ lp["wo"]
+
+
+def encode(params: Dict, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, encoder_len, d) precomputed conv-frontend output (stub)."""
+    dtype = _dtype(cfg.compute_dtype)
+    x = frames.astype(dtype) + params["enc_pos"].astype(dtype)[None]
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    x = pspec.shard(x, "batch", "sp", None)
+
+    def body(x, lp):
+        lp = cast_tree(lp, dtype)
+        h = norm("layernorm", x, lp["ln1"])
+        mixed, _ = L.attention_block(lp["attn"], h, cfg.attention,
+                                     positions=jnp.zeros_like(positions),
+                                     causal=False, impl="dense")
+        x = x + mixed
+        h = norm("layernorm", x, lp["ln2"])
+        return pspec.shard(x + L.mlp_block(lp["mlp"], h, "gelu"),
+                           "batch", "sp", None), ()
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return norm("layernorm", x, params["enc_norm"])
+
+
+def _enc_kv(lp_cross, enc_out, cfg):
+    a = cfg.attention
+    b, t, _ = enc_out.shape
+    k = (enc_out @ lp_cross["wk"]).reshape(b, t, a.n_heads, a.head_dim)
+    v = (enc_out @ lp_cross["wv"]).reshape(b, t, a.n_heads, a.head_dim)
+    return k, v
+
+
+def forward_encdec(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                   frames: jnp.ndarray) -> jnp.ndarray:
+    """Teacher-forcing decode over the full token sequence (training)."""
+    dtype = _dtype(cfg.compute_dtype)
+    enc_out = encode(params, cfg, frames)
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(dtype) + \
+        params["dec_pos"][:s].astype(dtype)[None]
+    x = pspec.shard(x, "batch", "sp", None)
+    positions = jnp.arange(s)[None, :]
+
+    def body(x, lp):
+        lp = cast_tree(lp, dtype)
+        h = norm("layernorm", x, lp["ln1"])
+        mixed, _ = L.attention_block(lp["self"], h, cfg.attention,
+                                     positions=jnp.zeros_like(positions),
+                                     causal=True, impl="chunked", chunk=1024)
+        x = x + mixed
+        h = norm("layernorm", x, lp["lnx"])
+        x = x + _cross_attn(lp["cross"], h, *_enc_kv(lp["cross"], enc_out, cfg), cfg)
+        h = norm("layernorm", x, lp["ln2"])
+        return pspec.shard(x + L.mlp_block(lp["mlp"], h, "gelu"),
+                           "batch", "sp", None), ()
+
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = norm("layernorm", x, params["final_norm"])
+    return x @ params["embed"].T.astype(dtype)
+
+
+def init_cache_encdec(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    dtype = _dtype(cfg.compute_dtype)
+    a = cfg.attention
+    Ld = cfg.n_layers
+    e = cfg.enc_dec
+    return {
+        "self": {
+            "k": jnp.zeros((Ld, batch, max_len, a.n_kv_heads, a.head_dim), dtype),
+            "v": jnp.zeros((Ld, batch, max_len, a.n_kv_heads, a.head_dim), dtype),
+            "kpos": jnp.full((Ld, max_len), -1, jnp.int32),
+            "pos": jnp.zeros((Ld,), jnp.int32),
+        },
+        "cross_k": jnp.zeros((Ld, batch, e.encoder_len, a.n_heads, a.head_dim), dtype),
+        "cross_v": jnp.zeros((Ld, batch, e.encoder_len, a.n_heads, a.head_dim), dtype),
+    }
+
+
+def prefill_encdec(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                   frames: jnp.ndarray, cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """Encode audio + run the prompt tokens, filling self- and cross-caches."""
+    dtype = _dtype(cfg.compute_dtype)
+    enc_out = encode(params, cfg, frames)
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(dtype) + \
+        params["dec_pos"][:s].astype(dtype)[None]
+    x = pspec.shard(x, "batch", "sp", None)
+    positions = jnp.arange(s)[None, :]
+
+    def body(x, inp):
+        lp, sc = inp
+        lp = cast_tree(lp, dtype)
+        h = norm("layernorm", x, lp["ln1"])
+        mixed, nc = L.attention_block(lp["self"], h, cfg.attention,
+                                      positions=jnp.zeros_like(positions),
+                                      causal=True, cache=sc,
+                                      impl="chunked", chunk=1024)
+        x = x + mixed
+        ck, cv = _enc_kv(lp["cross"], enc_out, cfg)
+        h = norm("layernorm", x, lp["lnx"])
+        x = x + _cross_attn(lp["cross"], h, ck, cv, cfg)
+        h = norm("layernorm", x, lp["ln2"])
+        x = x + L.mlp_block(lp["mlp"], h, "gelu")
+        return x, (nc, ck.astype(dtype), cv.astype(dtype))
+
+    x, (self_c, cross_k, cross_v) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["self"]))
+    x = norm("layernorm", x[:, -1:], params["final_norm"])
+    logits = x @ params["embed"].T.astype(dtype)
+    return logits, {"self": self_c, "cross_k": cross_k, "cross_v": cross_v}
+
+
+def decode_step_encdec(params: Dict, cfg: ModelConfig, token: jnp.ndarray,
+                       cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    dtype = _dtype(cfg.compute_dtype)
+    b = token.shape[0]
+    pos0 = cache["self"]["pos"][0]
+    x = params["embed"][token].astype(dtype) + \
+        jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos0, 1, axis=0
+                                     ).astype(dtype)[None, 0:1]
+    positions = pos0 + jnp.zeros((1, 1), jnp.int32)
+
+    def body(x, inp):
+        lp, sc, ck, cv = inp
+        lp = cast_tree(lp, dtype)
+        h = norm("layernorm", x, lp["ln1"])
+        mixed, nc = L.attention_block(lp["self"], h, cfg.attention,
+                                      positions=jnp.zeros_like(positions),
+                                      causal=True, cache=sc, impl="dense")
+        x = x + mixed
+        h = norm("layernorm", x, lp["lnx"])
+        x = x + _cross_attn(lp["cross"], h, ck, cv, cfg)
+        h = norm("layernorm", x, lp["ln2"])
+        x = x + L.mlp_block(lp["mlp"], h, "gelu")
+        return x, nc
+
+    x, self_c = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["self"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = norm("layernorm", x, params["final_norm"])
+    logits = x @ params["embed"].T.astype(dtype)
+    return logits, {"self": self_c, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"]}

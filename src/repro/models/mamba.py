@@ -1,0 +1,189 @@
+"""Mamba-1 selective-SSM block (falcon-mamba, jamba mamba layers).
+
+Selective scan  h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t,  y_t = C_t h_t + D x_t
+with diagonal A (d_inner, d_state).
+
+Memory discipline: the per-token hidden state is d_inner × d_state floats —
+materializing it for every position is impossible at 4k×B sequences.  The
+CUDA kernel the paper's ecosystem uses never stores it; the TPU-idiomatic
+equivalent here is a **two-level chunked scan**: an outer ``lax.scan`` over
+sequence chunks carries (h, conv tail), the inner chunk is computed with a
+time-step ``lax.scan`` whose body is rematerialized (``jax.checkpoint``), so
+backward memory is O(S/chunk · state + chunk inputs), not O(S · state).
+
+Decode: single-step recurrence over cached (conv tail, h) — O(1) per token,
+which is why the ssm/hybrid architectures run the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import SSMConfig
+from .. import pspec
+
+__all__ = ["init_mamba", "mamba_block", "init_mamba_cache"]
+
+
+def init_mamba(key, cfg: SSMConfig, d_model: int, dtype) -> Dict:
+    di = cfg.d_inner(d_model)
+    dtr = cfg.dt_rank_of(d_model)
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    return {
+        "in_proj": jax.random.normal(ks[0], (d_model, 2 * di), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (cfg.d_conv, di), dtype) * 0.5,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": jax.random.normal(ks[2], (di, dtr + 2 * cfg.d_state), dtype) * (di ** -0.5),
+        "dt_proj": jax.random.normal(ks[3], (dtr, di), dtype) * (dtr ** -0.5),
+        "dt_bias": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32), (di, cfg.d_state)).copy()),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[5], (di, d_model), dtype) * (di ** -0.5),
+    }
+
+
+def init_mamba_cache(cfg: SSMConfig, d_model: int, batch: int, dtype) -> Dict:
+    di = cfg.d_inner(d_model)
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, di), dtype),
+        "h": jnp.zeros((batch, di, cfg.d_state), jnp.float32),
+    }
+
+
+def _ssm_params(params: Dict, cfg: SSMConfig, xb: jnp.ndarray):
+    """xb: (..., di) post-conv activations -> (dt, B, C) selective params."""
+    dtr = cfg.dt_rank_of(params["in_proj"].shape[0])
+    proj = xb @ params["x_proj"]
+    dt, Bmat, Cmat = jnp.split(proj, [dtr, dtr + cfg.d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"] +
+                         params["dt_bias"].astype(jnp.float32))  # (..., di)
+    return dt, Bmat.astype(jnp.float32), Cmat.astype(jnp.float32)
+
+
+def _scan_chunk(params: Dict, cfg: SSMConfig, h0: jnp.ndarray,
+                xb: jnp.ndarray, z: jnp.ndarray,
+                mask: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential selective scan over one chunk.
+
+    xb/z: (B, C, di); h0: (B, di, N); mask: (C,) validity (padded positions
+    leave the state untouched) -> (y (B,C,di), hC)."""
+    A = -jnp.exp(params["A_log"])                     # (di, N)
+    dt, Bm, Cm = _ssm_params(params, cfg, xb.astype(jnp.float32))
+    if mask is not None:
+        dt = dt * mask[None, :, None]                 # dt=0 -> identity step
+    # pin shardings so every time step of the scan is collective-free:
+    # state and dt are d_inner-sharded over TP, B/C replicated per shard
+    # (without this, jamba's multi-pod scan emitted one small all-reduce
+    # PER TIME STEP — 1.86M all-reduces per train step)
+    h0 = pspec.shard(h0, "batch", "tp", None)
+    dt = pspec.shard(dt, "batch", None, "tp")
+    Bm = pspec.shard(Bm, "batch", None, None)
+    Cm = pspec.shard(Cm, "batch", None, None)
+    xb = pspec.shard(xb, "batch", None, "tp")
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp                     # (B,di),(B,di),(B,N),(B,N)
+        dA = jnp.exp(dt_t[..., None] * A[None])       # (B, di, N)
+        dBx = (dt_t * x_t)[..., None] * b_t[:, None, :]
+        # pin per-step layouts: h is d_inner-sharded, N replicated — XLA
+        # otherwise shards the tiny d_state axis and psums h EVERY step
+        h = pspec.shard(dA * h + dBx, "batch", "tp", None)
+        y = pspec.shard(jnp.einsum("bdn,bn->bd", h, c_t), "batch", "tp")
+        return h, y
+
+    xs = (jnp.moveaxis(xb.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0),
+          jnp.moveaxis(Cm, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                        # (B, C, di)
+    y = y + params["D"].astype(jnp.float32) * xb.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y, h
+
+
+def mamba_block(params: Dict, x: jnp.ndarray, cfg: SSMConfig, *,
+                cache: Optional[Dict] = None, impl: str = "chunked_scan",
+                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (B, S, d).  Train/prefill: chunked scan.  Decode (S == 1): O(1)
+    cached recurrence."""
+    b, s, d = x.shape
+    di = cfg.d_inner(d)
+    xz = pspec.shard(x @ params["in_proj"], "batch", None, "tp")
+    xr, z = jnp.split(xz, 2, axis=-1)                 # (B, S, di) each
+
+    if cache is not None and s == 1:
+        # --- decode step ---
+        conv_tail = cache["conv"]                     # (B, d_conv-1, di)
+        win = jnp.concatenate([conv_tail, xr.astype(conv_tail.dtype)], axis=1)
+        xb = jnp.einsum("bcd,cd->bd", win.astype(jnp.float32),
+                        params["conv_w"].astype(jnp.float32)) + \
+            params["conv_b"].astype(jnp.float32)
+        xb = jax.nn.silu(xb)
+        A = -jnp.exp(params["A_log"])
+        dt, Bm, Cm = _ssm_params(params, cfg, xb)
+        dA = jnp.exp(dt[..., None] * A[None])
+        h = dA * cache["h"] + (dt * xb)[..., None] * Bm[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, Cm)
+        y = y + params["D"].astype(jnp.float32) * xb
+        y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+        out = (y.astype(x.dtype) @ params["out_proj"])[:, None]
+        new_cache = {"conv": win[:, 1:].astype(conv_tail.dtype), "h": h}
+        return out, new_cache
+
+    # --- train / prefill: depthwise causal conv then chunked scan ---
+    pad = jnp.zeros((b, cfg.d_conv - 1, di), xr.dtype)
+    xpad = jnp.concatenate([pad, xr], axis=1)         # (B, S+dc-1, di)
+    xb = sum(xpad[:, i:i + s] * params["conv_w"][i] for i in range(cfg.d_conv))
+    xb = jax.nn.silu(xb + params["conv_b"])
+
+    if impl in ("pallas", "pallas_interpret") and cache is None:
+        # Pallas selective-scan kernel path (TPU production; interpret on CPU)
+        from ..kernels import ops as kops
+
+        A = params["A_log"]
+        dt, Bm, Cm = _ssm_params(params, cfg, xb.astype(jnp.float32))
+        y = kops.selective_scan(
+            xb.astype(jnp.float32), dt, Bm, Cm, -jnp.exp(A),
+            params["D"].astype(jnp.float32),
+            interpret=(impl == "pallas_interpret"))
+        y = y * jax.nn.silu(z.astype(jnp.float32))
+        return y.astype(x.dtype) @ params["out_proj"], None
+
+    chunk = min(cfg.chunk, s)
+    s_pad = -(-s // chunk) * chunk                    # ragged: pad tail zeros
+    if s_pad != s:
+        zpad = jnp.zeros((b, s_pad - s, di))
+        xb = jnp.concatenate([xb, zpad.astype(xb.dtype)], axis=1)
+        z = jnp.concatenate([z, zpad.astype(z.dtype)], axis=1)
+    nc = s_pad // chunk
+    xb_c = xb.reshape(b, nc, chunk, di)
+    z_c = z.reshape(b, nc, chunk, di)
+    valid = (jnp.arange(s_pad) < s).astype(jnp.float32).reshape(nc, chunk)
+
+    inner = jax.checkpoint(partial(_scan_chunk, params, cfg))
+
+    def outer(h, inp):
+        xc, zc, mk = inp
+        y, h = inner(h, xc, zc, mk)
+        return h, y
+
+    h0 = (cache["h"] if cache is not None
+          else jnp.zeros((b, di, cfg.d_state), jnp.float32))
+    h_final, ys = jax.lax.scan(outer, h0,
+                               (jnp.moveaxis(xb_c, 1, 0),
+                                jnp.moveaxis(z_c, 1, 0), valid))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s_pad, di)[:, :s]
+    out = y.astype(x.dtype) @ params["out_proj"]
+    new_cache = None
+    if cache is not None:  # prefill: final SSM state + conv tail
+        tail = xpad[:, s: s + cfg.d_conv - 1]  # last d_conv-1 real inputs
+        new_cache = {"conv": tail.astype(cache["conv"].dtype), "h": h_final}
+    return out, new_cache

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts block: top-k routing with capacity-based dispatch.
+
+Gather/scatter-free formulation chosen for SPMD friendliness and bounded
+memory (DESIGN.md §6):
+
+1. router logits (G, Tg, E) -> top_k expert ids + normalized gates;
+2. per-slot positions inside each expert's capacity via K sequential
+   one-hot cumsums (transient (G, Tg, E) each — never (T, E, C));
+3. dispatch by *gather*: token index table (G, E, C) -> expert inputs
+   (G, E, C, d) via take_along_axis;
+4. expert FFN einsums with weights (E, d, f) — E shards over the ``model``
+   mesh axis (expert parallelism); XLA inserts the all-to-alls;
+5. combine by the transpose gather (G, Tg, K, d) weighted by gates.
+
+Supports DeepSeekMoE fine-grained experts + shared experts (always-active
+experts computed as a dense gated FFN of width n_shared * d_expert).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import MoEConfig
+from .. import pspec
+from .layers import init_mlp, mlp_block
+
+__all__ = ["init_moe", "moe_block"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def init_moe(key, cfg: MoEConfig, d_model: int, dtype) -> Dict:
+    m = cfg
+    ks = jax.random.split(key, 5)
+    s = d_model ** -0.5
+    p = {
+        "router": jax.random.normal(ks[0], (d_model, m.n_experts), jnp.float32) * s,
+        "w_gate": jax.random.normal(ks[1], (m.n_experts, d_model, m.d_expert), dtype) * s,
+        "w_up": jax.random.normal(ks[2], (m.n_experts, d_model, m.d_expert), dtype) * s,
+        "w_down": jax.random.normal(ks[3], (m.n_experts, m.d_expert, d_model), dtype) * (m.d_expert ** -0.5),
+    }
+    if m.n_shared_experts > 0:
+        p["shared"] = init_mlp(ks[4], d_model, m.n_shared_experts * m.d_expert,
+                               dtype, gated=True)
+    return p
+
+
+def moe_block(params: Dict, x: jnp.ndarray, cfg: MoEConfig, *,
+              activation: str = "silu", group: int = 1024,
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    m = cfg
+    b, s, d = x.shape
+    T = b * s
+    tg = min(group, T)
+    assert T % tg == 0, (T, tg)
+    g = T // tg
+    xg = x.reshape(g, tg, d)
+
+    logits = jnp.einsum("gtd,de->gte", xg, params["router"].astype(xg.dtype),
+                        preferred_element_type=jnp.float32)       # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)         # (G,Tg,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch-style)
+    me = probs.mean(axis=(0, 1))                                   # (E,)
+    ce = jax.nn.one_hot(expert_ids[..., 0], m.n_experts).mean(axis=(0, 1))
+    aux = m.n_experts * jnp.sum(me * ce) * m.aux_loss_coef
+
+    cap = _round_up(max(1, int(tg * m.top_k / m.n_experts * m.capacity_factor)), 8)
+
+    # --- per-slot positions within expert capacity (K sequential cumsums) ---
+    token_idx = jnp.zeros((g, m.n_experts, cap), jnp.int32)        # (G,E,C)
+    token_valid = jnp.zeros((g, m.n_experts, cap), dtype=bool)
+    pos_k = []
+    counts = jnp.zeros((g, 1, m.n_experts), jnp.float32)
+    for slot in range(m.top_k):
+        onehot = jax.nn.one_hot(expert_ids[..., slot], m.n_experts)   # (G,Tg,E)
+        pos = jnp.cumsum(onehot, axis=1) - 1.0 + counts               # (G,Tg,E)
+        counts = counts + onehot.sum(axis=1, keepdims=True)
+        p_tok = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)      # (G,Tg)
+        ok = p_tok < cap
+        pos_k.append((p_tok, ok))
+        # scatter token index into (G, E, C) table
+        e_ids = expert_ids[..., slot]                                 # (G,Tg)
+        flat_ec = jnp.where(ok, e_ids * cap + jnp.minimum(p_tok, cap - 1), 0)
+        upd_idx = jnp.where(ok, jnp.arange(tg)[None, :], 0)
+        tbl = token_idx.reshape(g, m.n_experts * cap)
+        vld = token_valid.reshape(g, m.n_experts * cap)
+        tbl = jax.vmap(lambda t_, f_, u_, o_: t_.at[f_].set(
+            jnp.where(o_, u_, t_[f_])))(tbl, flat_ec, upd_idx, ok)
+        vld = jax.vmap(lambda v_, f_, o_: v_.at[f_].max(o_))(vld, flat_ec, ok)
+        token_idx = tbl.reshape(g, m.n_experts, cap)
+        token_valid = vld.reshape(g, m.n_experts, cap)
+
+    # --- dispatch gather: (G, E, C, d) ---
+    gathered = jnp.take_along_axis(
+        xg[:, None, :, :],                                            # (G,1,Tg,d)
+        token_idx[..., None].astype(jnp.int32).reshape(g, m.n_experts, cap, 1)
+        .clip(0, tg - 1),
+        axis=2)                                                       # broadcast E
+    gathered = jnp.where(token_valid[..., None], gathered, 0.0)
+    # expert parallelism: groups follow the batch shards, experts follow TP
+    gathered = pspec.shard(gathered, "batch", "tp", None, None)
+
+    # --- expert FFN (E sharded over `model`) ---
+    act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("gecd,edf->gecf", gathered, params["w_gate"])) * \
+        jnp.einsum("gecd,edf->gecf", gathered, params["w_up"])
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["w_down"])    # (G,E,C,d)
+    expert_out = pspec.shard(expert_out, "batch", "tp", None, None)
+
+    # --- combine: transpose gather per slot ---
+    out = jnp.zeros((g, tg, d), expert_out.dtype)
+    eo_flat = expert_out.reshape(g, m.n_experts * cap, d)
+    for slot in range(m.top_k):
+        p_tok, ok = pos_k[slot]
+        e_ids = expert_ids[..., slot]
+        flat = (e_ids * cap + jnp.minimum(p_tok, cap - 1)).clip(0, m.n_experts * cap - 1)
+        piece = jnp.take_along_axis(eo_flat, flat[..., None], axis=1)  # (G,Tg,d)
+        w = (gate_vals[..., slot] * ok.astype(jnp.float32))[..., None]
+        out = out + piece * w.astype(piece.dtype)
+
+    out = out.reshape(b, s, d).astype(x.dtype)
+    if "shared" in params:
+        out = out + mlp_block(params["shared"], x, activation)
+    return out, aux

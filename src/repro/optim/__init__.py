@@ -1,0 +1,21 @@
+"""Optimizer substrate: AdamW with schedules, global-norm clipping, and
+gradient compression for the cross-pod all-reduce.
+
+Self-contained (no optax dependency): state is a pytree
+{"step", "m", "v"}; master weights stay in the params dtype (float32 by
+default), ZeRO-sharding of m/v follows the parameter sharding rules
+(repro.launch.sharding gives m/v the same PartitionSpec as the weight, so
+FSDP shards the optimizer state for free).
+"""
+
+from .adamw import AdamWConfig, adamw_init, adamw_update
+from .schedule import cosine_schedule, linear_warmup_cosine
+from .compress import (compress_bf16, compress_int8, decompress_int8,
+                       error_feedback_update)
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update",
+    "cosine_schedule", "linear_warmup_cosine",
+    "compress_bf16", "compress_int8", "decompress_int8",
+    "error_feedback_update",
+]

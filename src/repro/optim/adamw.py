@@ -1,0 +1,67 @@
+"""AdamW with decoupled weight decay and global-norm clipping."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), p)
+    return {"step": jnp.zeros((), jnp.int32), "m": zeros(params),
+            "v": zeros(params)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(jax.tree_util.tree_reduce(
+        lambda acc, g: acc + jnp.sum(jnp.square(g.astype(jnp.float32))),
+        tree, jnp.zeros((), jnp.float32)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    step = state["step"] + 1
+    lr = cfg.lr * (cfg.schedule(step) if cfg.schedule is not None else 1.0)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm > 0 else 1.0
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_p, {"step": step, "m": new_m, "v": new_v}, metrics

@@ -1,0 +1,69 @@
+"""Gradient compression for the cross-pod all-reduce (DESIGN.md §6).
+
+The ``pod`` mesh axis crosses the slow inter-pod links (DCN); compressing
+gradients before that all-reduce trades a little precision for 2-4x less
+DCN traffic:
+
+* ``compress_bf16`` — stochastic-rounded bf16 (2x).
+* ``compress_int8`` / ``decompress_int8`` — per-tensor absmax int8 (4x)
+  with ``error_feedback_update`` keeping a residual so quantization error
+  accumulates into later steps instead of being lost (EF-SGD style).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_bf16", "compress_int8", "decompress_int8",
+           "error_feedback_update"]
+
+
+def compress_bf16(tree, key: jax.Array):
+    """Stochastic rounding f32 -> bf16 (unbiased under averaging)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+
+    def sr(x, k):
+        x = x.astype(jnp.float32)
+        lo = x.astype(jnp.bfloat16)
+        lo32 = lo.astype(jnp.float32)
+        # next bf16 grid point toward x: one bf16 ULP via bit manipulation
+        # (nextafter would step one *f32* ULP, which collapses back to lo)
+        bits = jax.lax.bitcast_convert_type(lo, jnp.uint16).astype(jnp.int32)
+        toward_up = x > lo32
+        neg = lo32 < 0
+        step = jnp.where(toward_up != neg, 1, -1)
+        hi = jax.lax.bitcast_convert_type(
+            (bits + step).astype(jnp.uint16), jnp.bfloat16)
+        hi32 = hi.astype(jnp.float32)
+        span = jnp.where(hi32 != lo32, jnp.abs(hi32 - lo32), 1.0)
+        p_hi = jnp.clip(jnp.abs(x - lo32) / span, 0.0, 1.0)
+        u = jax.random.uniform(k, x.shape)
+        return jnp.where(u < p_hi, hi, lo)
+
+    return treedef.unflatten([sr(x, k) for x, k in zip(leaves, keys)])
+
+
+def compress_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor absmax int8 quantization -> (q, scale)."""
+    x = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def error_feedback_update(grad: jnp.ndarray, residual: jnp.ndarray
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """EF: compress (grad + residual); the new residual is what the
+    quantizer dropped.  Returns (q, scale, new_residual)."""
+    g = grad.astype(jnp.float32) + residual
+    q, scale = compress_int8(g)
+    new_residual = g - decompress_int8(q, scale)
+    return q, scale, new_residual

@@ -1,0 +1,25 @@
+"""Learning-rate schedules (multipliers on the base lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule", "linear_warmup_cosine"]
+
+
+def cosine_schedule(total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return f
+
+
+def linear_warmup_cosine(warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_schedule(max(1, total_steps - warmup_steps), final_frac)
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(1, warmup_steps)
+        return jnp.where(s < warmup_steps, warm, cos(step - warmup_steps))
+    return f

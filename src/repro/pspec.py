@@ -1,0 +1,104 @@
+"""Activation-sharding annotation registry.
+
+Model code is mesh-agnostic; the launcher registers the active mesh and the
+logical->physical axis mapping, and layers annotate activations with
+*logical* axes:
+
+    with pspec.activation_mesh(mesh):
+        ...jit/lower...          # model calls pspec.shard(x, "batch", None, "tp")
+
+Outside a registered mesh every annotation is a no-op, so unit tests and
+CPU examples run unchanged.  Specs are divisibility-guarded (an axis that
+does not divide the dim is dropped) so one rule set serves full-size and
+smoke configs.
+
+Why explicit constraints: XLA SPMD propagates shardings forward from
+operands, but a gather from a vocab-sharded embedding produces a replicated
+result — without re-annotation the whole residual stream (and everything
+after it) runs unpartitioned.  The batch axis constraint after the
+embedding is what pins the activation layout for the entire network.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["activation_mesh", "shard", "axis_size", "current_mesh"]
+
+_tls = threading.local()
+
+# logical name -> physical mesh axes
+_LOGICAL = {
+    "batch": ("pod", "data"),   # data parallel (pods x FSDP groups)
+    "fsdp": ("data",),
+    "tp": ("model",),           # tensor / expert parallel
+    "sp": ("model",),           # Megatron-style sequence parallelism: the
+    #                             residual stream between layers shards its
+    #                             sequence dim over the TP axis, so scanned
+    #                             layer carries cost (B·S·d)/(data·model)
+    "seq": ("data", "model"),   # sequence parallelism (long-context decode)
+    "tp_pad": ("model",),       # TP with uneven (padded) sharding allowed:
+    #                             for head counts that don't divide the TP
+    #                             axis (e.g. MLA's 40 heads on 16-way TP) —
+    #                             XLA pads to 48; 20% waste beats full
+    #                             replication of every attention tensor
+}
+
+_ALLOW_UNEVEN = {"tp_pad"}
+
+
+def current_mesh():
+    return getattr(_tls, "mesh", None)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh):
+    prev = getattr(_tls, "mesh", None)
+    _tls.mesh = mesh
+    try:
+        yield
+    finally:
+        _tls.mesh = prev
+
+
+def _axes_size(mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def axis_size(name: str) -> int:
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    axes = [a for a in _LOGICAL.get(name, ()) if a in mesh.axis_names]
+    return _axes_size(mesh, tuple(axes)) if axes else 1
+
+
+def shard(x, *logical: Optional[str]):
+    """Annotate ``x`` with logical axes (None = unsharded dim).  No-op when
+    no mesh is registered or under incompatible dims."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        if name is None:
+            spec.append(None)
+            continue
+        phys = [a for a in _LOGICAL.get(name, (name,)) if a in mesh.axis_names]
+        uneven_ok = name in _ALLOW_UNEVEN
+        kept, size = [], 1
+        for a in phys:
+            s = mesh.shape[a]
+            if dim % (size * s) == 0 or (uneven_ok and dim >= size * s):
+                kept.append(a)
+                size *= s
+        spec.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    spec += [None] * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,297 @@
+"""ACADL object system, edges, AG validity, and the event simulator
+(paper §3, §4, §6)."""
+
+import numpy as np
+import pytest
+
+from repro.core.acadl import (ACADLEdge, AGValidityError, CONTAINS, Data,
+                              DanglingEdge, EdgeValidityError, ExecuteStage,
+                              FORWARD, FunctionalUnit, READ_DATA,
+                              RegisterFile, SRAM, WRITE_DATA,
+                              connect_dangling_edge, create_ag, generate,
+                              latency_t, simulate)
+from repro.core.acadl.storage import DRAM, SetAssociativeCache
+from repro.core.archs import make_gamma_ag, make_oma_ag, make_systolic_ag
+from repro.core.mapping.gemm import (gamma_gemm, init_gemm_memory,
+                                     oma_gemm_looped, oma_gemm_unrolled,
+                                     read_gemm_result)
+from repro.core.mapping.systolic import (init_systolic_memory,
+                                         read_systolic_result,
+                                         systolic_gemm_program)
+
+
+# ---------------------------------------------------------------------------
+# class system / edges
+# ---------------------------------------------------------------------------
+
+
+def test_edge_validity_rejects_bad_edges():
+    @generate
+    def arch():
+        ex = ExecuteStage(name="ex", latency=latency_t(1))
+        rf = RegisterFile(name="rf", registers={"r0": Data(32, 0)})
+        with pytest.raises(EdgeValidityError):
+            ACADLEdge(rf, ex, FORWARD)        # RF cannot forward
+        with pytest.raises(EdgeValidityError):
+            ACADLEdge(ex, rf, CONTAINS)       # stages contain FUs, not RFs
+
+    arch()
+
+
+def test_dangling_edges_connect_and_validate():
+    @generate
+    def arch():
+        ex = ExecuteStage(name="ex", latency=latency_t(1))
+        fu = FunctionalUnit(name="fu", to_process={"x"})
+        ACADLEdge(ex, fu, CONTAINS)
+        rf = RegisterFile(name="rf", registers={"r0": Data(32, 0)})
+        d1 = DanglingEdge(edge_type=READ_DATA, source=rf)
+        edge = connect_dangling_edge(d1, fu)
+        assert edge.source is rf and edge.target is fu
+        # unconnected dangling edge never materializes
+        DanglingEdge(edge_type=WRITE_DATA, source=fu)
+
+    arch()
+
+
+def test_duplicate_names_rejected():
+    @generate
+    def arch():
+        ExecuteStage(name="dup", latency=latency_t(1))
+        with pytest.raises(ValueError):
+            ExecuteStage(name="dup", latency=latency_t(1))
+
+    arch()
+
+
+def test_latency_t_forms():
+    assert latency_t(3).resolve() == 3
+    assert latency_t(lambda words=1, **_: 2 * words).resolve(words=4) == 8
+    assert latency_t("words + 1").resolve(words=4) == 5
+    with pytest.raises(ValueError):
+        latency_t(-1)
+
+
+def test_ag_port_bound_validation():
+    @generate
+    def arch():
+        # storage with 1 port but 2 connected MAUs -> invalid
+        from repro.core.acadl import (InstructionFetchStage,
+                                      InstructionMemoryAccessUnit,
+                                      MemoryAccessUnit)
+        imem = SRAM(name="imem", address_ranges=((0, 100),))
+        pcrf = RegisterFile(name="pcrf", registers={"pc": Data(32, 0)})
+        ifs = InstructionFetchStage(name="ifs", latency=latency_t(1),
+                                    issue_buffer_size=4)
+        imau = InstructionMemoryAccessUnit(name="imau", latency=latency_t(0))
+        ACADLEdge(imem, imau, READ_DATA)
+        ACADLEdge(pcrf, imau, READ_DATA)
+        ACADLEdge(ifs, imau, CONTAINS)
+        st = SRAM(name="st", address_ranges=((0, 100),), read_write_ports=1)
+        for i in range(2):
+            ex = ExecuteStage(name=f"ex{i}", latency=latency_t(1))
+            mau = MemoryAccessUnit(name=f"mau{i}")
+            ACADLEdge(ex, mau, CONTAINS)
+            ACADLEdge(st, mau, READ_DATA)
+            ACADLEdge(ifs, ex, FORWARD)
+
+    arch()
+    with pytest.raises(AGValidityError):
+        create_ag()
+
+
+# ---------------------------------------------------------------------------
+# OMA (paper §4.1 / §5 Listing 5)
+# ---------------------------------------------------------------------------
+
+
+def gemm_case(m, n, l, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.integers(-4, 5, (m, n)).astype(float)
+    B = rng.integers(-4, 5, (n, l)).astype(float)
+    return A, B
+
+
+@pytest.mark.parametrize("m,n,l", [(2, 3, 4), (4, 4, 4), (5, 7, 3)])
+def test_oma_gemm_looped_functional(m, n, l):
+    A, B = gemm_case(m, n, l)
+    ag, _ = make_oma_ag()
+    init_gemm_memory(ag, A, B)
+    res = simulate(ag, oma_gemm_looped(m, n, l))
+    assert np.array_equal(read_gemm_result(ag, m, l), A @ B)
+    assert res.cycles > 0
+
+
+def test_oma_unrolled_matches_and_is_faster():
+    A, B = gemm_case(6, 6, 6)
+    ag1, _ = make_oma_ag()
+    init_gemm_memory(ag1, A, B)
+    r_loop = simulate(ag1, oma_gemm_looped(6, 6, 6))
+    ag2, _ = make_oma_ag()
+    init_gemm_memory(ag2, A, B)
+    r_unroll = simulate(ag2, oma_gemm_unrolled(6, 6, 6))
+    assert np.array_equal(read_gemm_result(ag2, 6, 6), A @ B)
+    # unrolled has no branch bubbles or loop bookkeeping
+    assert r_unroll.cycles < r_loop.cycles
+
+
+def test_oma_tiling_changes_cache_behavior():
+    """Execution order has a significant impact on execution time via the
+    cache (paper §5): tiled and untiled visits of the same (i,j,k) space
+    give different cycle counts, same functional result."""
+    m = n = l = 8
+    A, B = gemm_case(m, n, l)
+    cycles = {}
+    for tile in (0, 2):
+        ag, _ = make_oma_ag(cache_sets=8, cache_ways=2, cache_line_size=4,
+                            cache_miss_latency=30)
+        init_gemm_memory(ag, A, B)
+        prog = oma_gemm_unrolled(m, n, l, tile, tile, tile)
+        res = simulate(ag, prog)
+        assert np.array_equal(read_gemm_result(ag, m, l), A @ B)
+        cycles[tile] = res.cycles
+    assert cycles[2] != cycles[0]  # order visibly changes the timing
+
+
+def test_oma_cache_size_changes_timing():
+    """Bigger cache -> fewer misses -> fewer cycles for the same program."""
+    m = n = l = 8
+    A, B = gemm_case(m, n, l)
+    cycles = {}
+    for sets in (2, 64):
+        ag, _ = make_oma_ag(cache_sets=sets, cache_ways=2, cache_line_size=4,
+                            cache_miss_latency=30)
+        init_gemm_memory(ag, A, B)
+        cycles[sets] = simulate(ag, oma_gemm_unrolled(m, n, l)).cycles
+    assert cycles[64] < cycles[2]
+
+
+# ---------------------------------------------------------------------------
+# storage timing models
+# ---------------------------------------------------------------------------
+
+
+def test_dram_row_buffer_model():
+    d = DRAM(name="d", read_latency=4, t_RCD=8, t_RP=8, row_size=16,
+             address_ranges=((0, 1 << 20),))
+    first = d.access_latency("read", 0)         # bank idle: t_RCD + base
+    hit = d.access_latency("read", 1)           # same row: base
+    miss = d.access_latency("read", 1000)       # row switch: t_RP+t_RCD+base
+    assert first == 12 and hit == 4 and miss == 20
+
+
+def test_cache_lru():
+    c = SetAssociativeCache(name="c", sets=2, ways=2, hit_latency=1,
+                            miss_latency=10, cache_line_size=4)
+    assert c.access_latency("read", 0) == 10     # cold miss
+    assert c.access_latency("read", 1) == 1      # same line
+    assert c.access_latency("read", 8) == 10     # same set, second way
+    assert c.access_latency("read", 0) == 1      # still resident
+    assert c.access_latency("read", 16) == 10    # evicts LRU (line 8)
+    assert c.access_latency("read", 0) == 1
+    assert c.access_latency("read", 8) == 10     # line 8 was evicted
+
+
+def test_burst_cycles():
+    s = SRAM(name="s", read_latency=2, port_width=8, address_ranges=((0, 10),))
+    assert s.access_latency("read", 0, words=8) == 2
+    assert s.access_latency("read", 0, words=64) == 2 + 7
+
+
+# ---------------------------------------------------------------------------
+# systolic array (paper §4.2) and Γ̈ (paper §4.3)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,l,rows,cols", [(2, 3, 2, 2, 2), (6, 7, 5, 4, 4)])
+def test_systolic_gemm(m, k, l, rows, cols):
+    rng = np.random.default_rng(1)
+    A = rng.integers(-3, 4, (m, k)).astype(float)
+    B = rng.integers(-3, 4, (k, l)).astype(float)
+    ag, _ = make_systolic_ag(rows, cols)
+    init_systolic_memory(ag, A, B)
+    res = simulate(ag, systolic_gemm_program(m, k, l, rows, cols))
+    assert np.array_equal(read_systolic_result(ag, m, l), A @ B)
+    assert res.cycles > 0
+
+
+def test_systolic_bigger_array_is_faster():
+    A = np.ones((8, 8)); B = np.ones((8, 8))
+    cycles = {}
+    for r in (2, 4):
+        ag, _ = make_systolic_ag(r, r)
+        init_systolic_memory(ag, A, B)
+        cycles[r] = simulate(ag, systolic_gemm_program(8, 8, 8, r, r)).cycles
+    assert cycles[4] < cycles[2]
+
+
+@pytest.mark.parametrize("nu", [1, 2, 4])
+def test_gamma_gemm_units_scale(nu):
+    A = np.ones((32, 32), np.float32); B = np.ones((32, 32), np.float32)
+    ag, _ = make_gamma_ag(n_units=nu)
+    init_gemm_memory(ag, A, B, memory="dram0", tile=8)
+    units = tuple((f"lsu{k}", f"matMulFu{k}", f"vrf{k}") for k in range(nu))
+    res = simulate(ag, gamma_gemm(32, 32, 32, tile=8, units=units))
+    C = read_gemm_result(ag, 32, 32, c_base=0x100000, memory="dram0", tile=8)
+    assert np.array_equal(C, A @ B)
+
+
+def test_gamma_relu_activation():
+    rng = np.random.default_rng(2)
+    A = rng.normal(size=(8, 8)).astype(np.float32)
+    B = rng.normal(size=(8, 8)).astype(np.float32)
+    ag, _ = make_gamma_ag(n_units=1)
+    init_gemm_memory(ag, A, B, memory="dram0", tile=8)
+    simulate(ag, gamma_gemm(8, 8, 8, tile=8, activation=1))
+    C = read_gemm_result(ag, 8, 8, c_base=0x100000, memory="dram0", tile=8)
+    assert np.allclose(C, np.maximum(A @ B, 0), atol=1e-5)
+
+
+def test_gamma_scratchpad_store_listing4():
+    """Paper Listing 4: gemm result stored to the scratchpad."""
+    A = np.ones((8, 8), np.float32); B = np.ones((8, 8), np.float32)
+    ag, _ = make_gamma_ag(n_units=1)
+    init_gemm_memory(ag, A, B, memory="dram0", tile=8)
+    simulate(ag, gamma_gemm(8, 8, 8, tile=8, c_base=0x3000))
+    spm = ag.by_name["spm0"]
+    assert np.array_equal(spm.read(0x3000), A @ B)
+
+
+# ---------------------------------------------------------------------------
+# Eyeriss-derived (row-stationary conv) and Plasticine-derived (patterns)
+# ---------------------------------------------------------------------------
+
+
+def test_eyeriss_row_stationary_conv():
+    from repro.core.archs import make_eyeriss_ag
+    from repro.core.mapping.conv import (eyeriss_conv2d, init_conv_memory,
+                                         read_conv_result)
+    rng = np.random.default_rng(0)
+    ifm = rng.integers(-3, 4, (10, 12)).astype(float)
+    flt = rng.integers(-2, 3, (3, 3)).astype(float)
+    ag, _ = make_eyeriss_ag(rows=4, columns=4)
+    init_conv_memory(ag, ifm, flt)
+    res = simulate(ag, eyeriss_conv2d(10, 12, 3, 3, 4, 4))
+    out = read_conv_result(ag, 8)
+    ref = np.zeros((8, 10))
+    for i in range(8):
+        for j in range(10):
+            ref[i, j] = np.sum(ifm[i:i + 3, j:j + 3] * flt)
+    assert np.allclose(out, ref)
+    assert res.cycles > 0
+
+
+def test_plasticine_map_reduce_scales():
+    from repro.core.archs import make_plasticine_ag
+    from repro.core.mapping.patterns import (init_vector_memory,
+                                             plasticine_map_reduce,
+                                             read_scalar)
+    x = np.random.default_rng(1).normal(size=(1024,))
+    cycles = {}
+    for n in (2, 4):
+        ag, _ = make_plasticine_ag(n_pcu=n, n_pmu=n)
+        init_vector_memory(ag, x, n)
+        res = simulate(ag, plasticine_map_reduce(1024, n, n))
+        assert np.isclose(read_scalar(ag, n), (x * x).sum())
+        cycles[n] = res.cycles
+    assert cycles[4] < cycles[2]     # more PCUs -> faster

@@ -1,0 +1,168 @@
+"""Per-arch smoke tests (reduced configs, CPU): one forward + one train
+step, shape/finiteness asserts; prefill+decode serving-path consistency."""
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_arch_ids, get_config, get_smoke_config
+from repro.models import SHAPES, cell_is_runnable, get_model, input_specs
+
+ARCHS = all_arch_ids()
+
+
+def make_batch(cfg, B, S, key=1, dtype=jnp.float32):
+    batch = {"tokens": jax.random.randint(jax.random.key(key), (B, S), 0,
+                                          cfg.vocab_size)}
+    if cfg.n_patches:
+        batch["patches"] = jax.random.normal(
+            jax.random.key(2), (B, cfg.n_patches, cfg.d_model), dtype)
+    if cfg.enc_dec is not None:
+        batch["frames"] = jax.random.normal(
+            jax.random.key(3), (B, cfg.enc_dec.encoder_len, cfg.d_model), dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S)
+    logits = model.logits(params, batch)
+    exp_s = S + (cfg.n_patches or 0)
+    assert logits.shape == (B, exp_s, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    def loss(p):
+        lg, aux = model.logits_and_aux(p, batch)
+        lp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+        return -lp.mean() + aux
+
+    g = jax.grad(loss)(params)
+    gsq = jax.tree_util.tree_reduce(
+        lambda a, b: a + jnp.sum(jnp.square(b.astype(jnp.float32))), g, 0.0)
+    assert bool(jnp.isfinite(gsq)) and float(gsq) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_serve_consistency(arch):
+    """prefill(x[:-1]) + decode(x[-1]) logits == full forward at -1."""
+    cfg = replace(get_smoke_config(arch), compute_dtype="float32")
+    if cfg.moe is not None:
+        cfg = replace(cfg, moe=replace(cfg.moe, capacity_factor=8.0))
+    model = get_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    B, S = 2, 12
+    batch = make_batch(cfg, B, S)
+    full = model.logits(params, batch)
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :S - 1]
+    cache = model.init_cache(B, 32)
+    lg_pre, cache = model.prefill(params, pre, cache)
+    lg_dec, cache = model.decode_step(params, batch["tokens"][:, S - 1:S],
+                                      cache)
+    np.testing.assert_allclose(np.asarray(full[:, -1], np.float32),
+                               np.asarray(lg_dec[:, 0], np.float32),
+                               atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(full[:, -2], np.float32),
+                               np.asarray(lg_pre[:, 0], np.float32),
+                               atol=2e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The full-size configs carry the exact assigned hyperparameters."""
+    assigned = {
+        "minicpm3_4b": dict(n_layers=62, d_model=2560, d_ff=6400,
+                            vocab_size=73448, n_heads=40),
+        "h2o_danube3_4b": dict(n_layers=24, d_model=3840, d_ff=10240,
+                               vocab_size=32000, n_heads=32, n_kv=8),
+        "mistral_large_123b": dict(n_layers=88, d_model=12288, d_ff=28672,
+                                   vocab_size=32768, n_heads=96, n_kv=8),
+        "olmo_1b": dict(n_layers=16, d_model=2048, d_ff=8192,
+                        vocab_size=50304, n_heads=16),
+        "phi3_vision_4b": dict(n_layers=32, d_model=3072, d_ff=8192,
+                               vocab_size=32064, n_heads=32),
+        "deepseek_moe_16b": dict(n_layers=28, d_model=2048, d_ff=1408,
+                                 vocab_size=102400, n_experts=64, top_k=6),
+        "olmoe_1b_7b": dict(n_layers=16, d_model=2048, d_ff=1024,
+                            vocab_size=50304, n_experts=64, top_k=8),
+        "jamba_v01_52b": dict(n_layers=32, d_model=4096, d_ff=14336,
+                              vocab_size=65536, n_experts=16, top_k=2),
+        "falcon_mamba_7b": dict(n_layers=64, d_model=4096, vocab_size=65024,
+                                d_state=16),
+        "whisper_small": dict(n_layers=12, d_model=768, d_ff=3072,
+                              vocab_size=51865, n_heads=12),
+    }[arch]
+    cfg = get_config(arch)
+    assert cfg.n_layers == assigned["n_layers"]
+    assert cfg.d_model == assigned["d_model"]
+    assert cfg.vocab_size == assigned["vocab_size"]
+    if "d_ff" in assigned:
+        assert cfg.d_ff == assigned["d_ff"]
+    if "n_heads" in assigned:
+        assert cfg.attention.n_heads == assigned["n_heads"]
+    if "n_kv" in assigned:
+        assert cfg.attention.n_kv_heads == assigned["n_kv"]
+    if "n_experts" in assigned:
+        assert cfg.moe.n_experts == assigned["n_experts"]
+        assert cfg.moe.top_k == assigned["top_k"]
+    if "d_state" in assigned:
+        assert cfg.ssm.d_state == assigned["d_state"]
+
+
+def test_param_count_sanity():
+    """Analytic n_params lands near each arch's nameplate size."""
+    expect = {"olmo_1b": 1.2e9, "falcon_mamba_7b": 7.3e9,
+              "mistral_large_123b": 123e9, "deepseek_moe_16b": 16.4e9,
+              "olmoe_1b_7b": 6.9e9, "jamba_v01_52b": 52e9}
+    for arch, n in expect.items():
+        got = get_config(arch).n_params()
+        assert 0.7 * n < got < 1.35 * n, (arch, got, n)
+
+
+def test_long_500k_skip_rule():
+    runnable = {a: cell_is_runnable(get_config(a), SHAPES["long_500k"])[0]
+                for a in ARCHS}
+    assert runnable["falcon_mamba_7b"] and runnable["jamba_v01_52b"] \
+        and runnable["h2o_danube3_4b"]
+    for a in ("minicpm3_4b", "mistral_large_123b", "olmo_1b",
+              "phi3_vision_4b", "deepseek_moe_16b", "olmoe_1b_7b",
+              "whisper_small"):
+        assert not runnable[a], a
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_input_specs_shapes(arch, shape):
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    specs = input_specs(cfg, sh)
+    if sh.mode == "train":
+        n_text = sh.seq_len - (cfg.n_patches or 0)
+        assert specs["tokens"].shape == (sh.global_batch, n_text)
+        assert specs["labels"].shape == (sh.global_batch, n_text)
+    else:
+        assert specs["token"].shape == (sh.global_batch, 1)
+
+
+def test_mla_cache_is_compressed():
+    """MLA's decode cache stores (kv_lora + rope) per token, independent of
+    head count — the technique's stated memory advantage."""
+    cfg = get_config("minicpm3_4b")
+    model = get_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(1, 1024))
+    leaf_bytes = sum(np.prod(l.shape) * l.dtype.itemsize
+                     for l in jax.tree_util.tree_leaves(cache))
+    a = cfg.attention
+    per_token = (a.kv_lora_rank + a.qk_rope_head_dim) * 2  # bf16
+    expect = cfg.n_layers * 1024 * per_token
+    assert leaf_bytes < expect * 1.1
+    # GQA equivalent would be n_heads * head_dim * 2 (k+v) per token
+    gqa_equiv = cfg.n_layers * 1024 * a.n_heads * a.head_dim * 2 * 2
+    assert leaf_bytes < gqa_equiv / 15  # >15x smaller

@@ -1,0 +1,108 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.acadl.storage import SetAssociativeCache
+from repro.core.aidg import build_aidg, longest_path
+from repro.core.acadl.sim import build_trace
+from repro.core.archs import make_gamma_ag
+from repro.core.mapping.gemm import gamma_gemm, init_gemm_memory
+from repro.kernels import ops, ref
+from repro.models.layers import apply_rope, chunked_attention, dense_attention
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(2, 24), st.integers(2, 24), st.integers(2, 24),
+       st.integers(0, 5))
+@settings(**SETTINGS)
+def test_maxplus_matches_ref_any_shape(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    out = ops.maxplus_matmul(A, B, bm=8, bk=8, bn=8)
+    np.testing.assert_allclose(out, ref.maxplus_matmul_ref(A, B), atol=1e-5)
+
+
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(1, 6),
+       st.integers(0, 3))
+@settings(**SETTINGS)
+def test_gemm_kernel_matches_ref_any_shape(mq, kq, nq, seed):
+    m, k, n = 8 * mq, 8 * kq, 8 * nq
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    out = ops.gemm(A, B, bm=16, bk=16, bn=16)
+    np.testing.assert_allclose(out, ref.gemm_ref(A, B), atol=1e-4, rtol=1e-4)
+
+
+@given(st.integers(0, 1000), st.integers(8, 64))
+@settings(**SETTINGS)
+def test_rope_preserves_norm(pos, dim):
+    dim = (dim // 2) * 2
+    x = jnp.asarray(np.random.default_rng(pos).normal(size=(1, 1, 1, dim)),
+                    jnp.float32)
+    y = apply_rope(x, jnp.asarray([[pos]]), 10_000.0)
+    np.testing.assert_allclose(float(jnp.linalg.norm(x)),
+                               float(jnp.linalg.norm(y)), rtol=1e-5)
+
+
+@given(st.integers(0, 4))
+@settings(max_examples=8, deadline=None)
+def test_attention_causality(seed):
+    """Perturbing future tokens never changes past outputs."""
+    rng = np.random.default_rng(seed)
+    s, h, d = 12, 2, 8
+    q = jnp.asarray(rng.normal(size=(1, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, s, h, d)), jnp.float32)
+    out = dense_attention(q, k, v, causal=True)
+    k2 = k.at[:, -1].add(100.0)
+    v2 = v.at[:, -1].add(-50.0)
+    out2 = dense_attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(np.asarray(out[:, :-1]),
+                               np.asarray(out2[:, :-1]), atol=1e-5)
+
+
+@given(st.integers(0, 4))
+@settings(max_examples=6, deadline=None)
+def test_chunked_equals_dense_attention(seed):
+    rng = np.random.default_rng(seed)
+    s, h, d = 16, 2, 8
+    q, k, v = (jnp.asarray(rng.normal(size=(1, s, h, d)), jnp.float32)
+               for _ in range(3))
+    a = dense_attention(q, k, v, causal=True)
+    b = chunked_attention(q, k, v, causal=True, chunk=4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@given(st.floats(1.0, 3.0), st.floats(1.0, 3.0))
+@settings(max_examples=10, deadline=None)
+def test_aidg_monotone_in_work(s1, s2):
+    """Scaling any latency up never reduces the estimated makespan."""
+    ag, _ = make_gamma_ag(n_units=2)
+    A = np.ones((16, 16), np.float32)
+    init_gemm_memory(ag, A, A, memory="dram0", tile=8)
+    units = (("lsu0", "matMulFu0", "vrf0"), ("lsu1", "matMulFu1", "vrf1"))
+    prog = gamma_gemm(16, 16, 16, tile=8, units=units)
+    trace = build_trace(ag, prog)
+    aidg = build_aidg(ag, trace)
+    t1 = longest_path(aidg, work=aidg.work * np.float32(s1)).max()
+    t2 = longest_path(aidg, work=aidg.work * np.float32(max(s1, s2))).max()
+    assert t2 >= t1 - 1e-6
+
+
+@given(st.lists(st.integers(0, 255), min_size=1, max_size=60),
+       st.integers(1, 4), st.integers(1, 4))
+@settings(**SETTINGS)
+def test_cache_hit_implies_faster(addrs, sets_pow, ways):
+    """Invariant: a probe() hit always returns hit_latency."""
+    c = SetAssociativeCache(name="c", sets=2 ** sets_pow, ways=ways,
+                            hit_latency=1, miss_latency=9, cache_line_size=4)
+    for a in addrs:
+        hit_predicted = c.probe(a)
+        lat = c.access_latency("read", a)
+        assert lat == (1 if hit_predicted else 9)

@@ -1,0 +1,54 @@
+"""End-to-end training: loss goes down; crash + auto-resume reproduces the
+uninterrupted run exactly (determinism contract of the data pipeline +
+checkpoint manager)."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.train import train_loop
+
+
+def quiet(*a, **k):
+    pass
+
+
+def test_train_loss_decreases(tmp_path):
+    cfg = get_smoke_config("olmo_1b")
+    _, metrics = train_loop(cfg, steps=30, batch=8, seq=64,
+                            ckpt_dir=None, print_fn=quiet)
+    losses = [r["loss"] for r in metrics.rows]
+    assert losses[-1] < losses[0] - 0.3
+
+
+def test_crash_resume_is_exact(tmp_path):
+    """Run A: 16 steps uninterrupted.  Run B: crash at step 12 (after the
+    step-8 checkpoint), restart, finish.  Final metrics must match."""
+    cfg = get_smoke_config("olmo_1b")
+    kw = dict(steps=16, batch=4, seq=32, ckpt_every=8, print_fn=quiet)
+
+    _, m_a = train_loop(cfg, ckpt_dir=str(tmp_path / "a"), **kw)
+
+    with pytest.raises(RuntimeError, match="injected failure"):
+        train_loop(cfg, ckpt_dir=str(tmp_path / "b"), fail_at_step=12, **kw)
+    _, m_b = train_loop(cfg, ckpt_dir=str(tmp_path / "b"), **kw)
+
+    last_a = [r for r in m_a.rows if r["step"] == 15][0]
+    last_b = [r for r in m_b.rows if r["step"] == 15][0]
+    np.testing.assert_allclose(last_a["loss"], last_b["loss"], rtol=1e-5)
+
+
+def test_moe_arch_trains(tmp_path):
+    cfg = get_smoke_config("olmoe_1b_7b")
+    _, metrics = train_loop(cfg, steps=16, batch=4, seq=32, ckpt_dir=None,
+                            print_fn=quiet)
+    losses = [r["loss"] for r in metrics.rows]
+    assert losses[-1] < losses[0]
+
+
+def test_ssm_arch_trains(tmp_path):
+    cfg = get_smoke_config("falcon_mamba_7b")
+    _, metrics = train_loop(cfg, steps=40, batch=4, seq=32, ckpt_dir=None,
+                            lr=1e-3, print_fn=quiet)  # SSM needs warmup
+    losses = [r["loss"] for r in metrics.rows]
+    assert losses[-1] < losses[0] - 0.5

@@ -1,0 +1,79 @@
+"""Workload extraction (paper §5) and sharding-rule invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import all_arch_ids, get_config, get_smoke_config
+from repro.core.aidg import estimate_cycles
+from repro.core.archs import TPU_V5E, make_tpu_v5e_ag
+from repro.core.mapping.workload import extract_operators, map_to_tpu
+from repro.launch.roofline import parse_collective_bytes, roofline_terms
+from repro.launch.sharding import guard_spec
+from repro.models import SHAPES, get_model
+
+
+@pytest.mark.parametrize("arch", all_arch_ids())
+def test_operator_macs_match_analytic_flops(arch):
+    """2 * extracted MACs ≈ 6·N_active·D for training (±25%)."""
+    cfg = get_config(arch)
+    shape = SHAPES["train_4k"]
+    ops = extract_operators(cfg, shape)
+    macs = sum(o.macs for o in ops)
+    tokens = shape.global_batch * shape.seq_len
+    model_flops = 6 * cfg.n_active_params() * tokens
+    ratio = 2 * macs / model_flops
+    assert 0.7 < ratio < 1.4, (arch, ratio)
+
+
+def test_tpu_mapping_reproduces_compute_roofline():
+    """AIDG cycles on the TPU-v5e ACADL model ≈ analytic compute bound for
+    a compute-bound workload (mistral train) — the model/roofline
+    cross-validation experiment."""
+    cfg = get_config("mistral-large-123b")
+    shape = SHAPES["train_4k"]
+    ag, _ = make_tpu_v5e_ag()
+    prog = map_to_tpu(cfg, shape, per_device=256)
+    cycles, _ = estimate_cycles(ag, prog)
+    secs = cycles / (TPU_V5E["clock_ghz"] * 1e9)
+    tokens = shape.global_batch * shape.seq_len
+    analytic = 6 * cfg.n_params() * tokens / 256 / TPU_V5E["peak_bf16_flops"]
+    assert 0.8 < secs / analytic < 1.5, (secs, analytic)
+
+
+def test_guard_spec_drops_nondividing_axes():
+    import jax
+    mesh = jax.make_mesh((1,), ("model",))  # single device: size-1 axes
+    spec = guard_spec(mesh, P("model", None), (7, 3))
+    assert spec == P("model", None)  # 7 % 1 == 0 -> kept
+
+
+def test_collective_parser_counts_while_trips():
+    hlo = """
+%body.1 (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ar = f32[8]{0} all-reduce(%x), replica_groups={}
+  ROOT %t = (s32[], f32[8]) tuple(%i, %ar)
+}
+%cond.1 (p: (s32[], f32[8])) -> pred[] {
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %ag = f32[16]{0} all-gather(%a), replica_groups={}
+  %w = (s32[], f32[8]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[8] get-tuple-element(%w), index=1
+}
+"""
+    out = parse_collective_bytes(hlo)
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["bytes"] == 16 * 4
+    assert out["all-reduce"]["count"] == 5            # 5 while trips
+    assert out["all-reduce"]["bytes"] == 5 * 8 * 4 * 2  # ring factor 2
+
+
+def test_roofline_terms():
+    t = roofline_terms(flops=197e12, hbm_bytes=819e9, coll_bytes=50e9)
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["memory_s"] - 1.0) < 1e-9
+    assert abs(t["collective_s"] - 1.0) < 1e-9
