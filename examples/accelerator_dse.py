@@ -1,10 +1,13 @@
-"""Accelerator design-space exploration — the paper's motivating use-case
-(§1: "selecting an accelerator that aligns with their product's
-performance requirements"; §7: NAS / DNN-HW co-design loop).
+"""Multi-architecture accelerator design-space exploration — the paper's
+motivating use-case (§1: "selecting an accelerator that aligns with their
+product's performance requirements"; §7: NAS / DNN-HW co-design loop).
 
-Sweeps 512 candidate Γ̈-like accelerators (MXU speed, DRAM latency, ...)
-against a GeMM workload in ONE batched JAX call over the AIDG, then
-reports the Pareto-best few.
+Sweeps a shared 5-knob design space (matrix unit, vector unit, load/store,
+on-chip SRAM, DRAM — multiplicative latency factors) over the FULL scenario
+matrix: 6 modeled architectures x their mapped workloads (GEMM, conv,
+attention, selective-scan, map-reduce), >= 1000 candidates per batch, one
+batched JAX sweep per cached AIDG.  Reports the Pareto frontier of
+(latency, cost/area proxy) and a coordinate-descent refinement.
 
     PYTHONPATH=src python examples/accelerator_dse.py
 """
@@ -13,54 +16,62 @@ import time
 
 import numpy as np
 
-from repro.core.acadl.sim import build_trace
-from repro.core.aidg import build_aidg, make_problem, sweep
-from repro.core.archs import make_gamma_ag
-from repro.core.mapping.gemm import gamma_gemm, init_gemm_memory
+from repro.core.aidg.explorer import (Explorer, grid_candidates,
+                                      random_candidates)
 
 
 def main():
-    # workload: 64x64x64 GeMM on a 2-unit Γ̈
-    A = np.ones((64, 64), np.float32)
-    ag, _ = make_gamma_ag(n_units=2)
-    init_gemm_memory(ag, A, A, memory="dram0", tile=8)
-    units = (("lsu0", "matMulFu0", "vrf0"), ("lsu1", "matMulFu1", "vrf1"))
-    prog = gamma_gemm(64, 64, 64, tile=8, units=units)
-
-    trace = build_trace(ag, prog)
-    aidg = build_aidg(ag, trace)
-    prob = make_problem(aidg)
-    print(f"workload: {aidg.n} instructions, {aidg.edges} AIDG edges")
-    print(f"tunable op classes: {prob.op_names}")
-    print(f"tunable storages:   {prob.storage_names}")
-
-    # candidate space: multiplicative latency factors over the baseline
-    rng = np.random.default_rng(0)
-    B = 512
-    thetas_op = rng.uniform(0.25, 4.0, (B, prob.n_op)).astype(np.float32)
-    thetas_st = rng.uniform(0.25, 4.0, (B, prob.n_st)).astype(np.float32)
-    thetas_op[0] = 1.0
-    thetas_st[0] = 1.0  # candidate 0 = the baseline machine
-
     t0 = time.perf_counter()
-    cycles = sweep(prob, thetas_op, thetas_st)
-    dt = time.perf_counter() - t0
-    print(f"\nswept {B} candidate accelerators in {dt:.2f}s "
-          f"({B / dt:.0f} designs/s)")
-    print(f"baseline: {cycles[0]:.0f} cycles")
+    ex = Explorer()
+    names = ex.scenario_names
+    print(f"scenario matrix ({len(names)} cells, "
+          f"compiled in {time.perf_counter() - t0:.2f}s):")
+    for cs in ex.compiled:
+        print(f"  {cs.name:20s} {cs.aidg.n:5d} instructions, "
+              f"baseline {cs.baseline:8.0f} cycles")
 
-    # a crude cost model: faster units cost more silicon
-    cost = (1 / thetas_op).sum(axis=1) + (1 / thetas_st).sum(axis=1)
-    score = cycles * cost                      # latency-cost product
-    best = np.argsort(score)[:5]
-    print("\ntop-5 by cycles x cost:")
-    for i in best:
-        ops = ", ".join(f"{n}x{thetas_op[i, j]:.2f}"
-                        for j, n in enumerate(prob.op_names))
-        sts = ", ".join(f"{n}x{thetas_st[i, j]:.2f}"
-                        for j, n in enumerate(prob.storage_names))
-        print(f"  #{i:3d}: {cycles[i]:7.0f} cycles  cost {cost[i]:5.2f}  "
-              f"[{ops} | {sts}]")
+    # --- candidates: full factorial grid + log-uniform random ------------
+    cand = np.concatenate([
+        grid_candidates(ex.space, points=3),          # 3^5 = 243
+        random_candidates(ex.space, 1024, seed=0),    # its row 0 (index 243
+    ])                                                #  here) = baseline θ=1
+    print(f"\nknobs: {ex.space.names}")
+    print(f"candidates: {cand.shape[0]} "
+          f"(x {len(names)} scenarios = {cand.shape[0] * len(names)} cells)")
+
+    ex.explore(cand)  # warm-up: JIT-compile each scenario at this batch shape
+    t0 = time.perf_counter()
+    res = ex.explore(cand)
+    dt = time.perf_counter() - t0
+    thr = cand.shape[0] * len(names) / dt
+    print(f"swept in {dt:.2f}s ({thr:.0f} (arch, workload, theta) configs/s, "
+          "steady-state)")
+
+    # --- Pareto frontier of (latency, cost) -------------------------------
+    print(f"\nPareto frontier ({len(res.pareto)} non-dominated designs, "
+          "latency = mean baseline-relative cycles, cost = area proxy):")
+    frontier = res.frontier()
+    step = max(1, len(frontier) // 8)
+    for row in frontier[::step]:
+        thetas = ", ".join(f"{n}x{row[f'theta[{n}]']:.2f}"
+                           for n in ex.space.names)
+        print(f"  latency {row['latency']:.3f}  cost {row['cost']:6.2f}  "
+              f"[{thetas}]")
+
+    i = res.best
+    print(f"\nbest latency*cost compromise (candidate {i}): "
+          f"latency {res.latency[i]:.3f}, cost {res.cost[i]:.2f}")
+    per_scn = ", ".join(f"{n}={c:.0f}" for n, c in zip(names, res.cycles[i]))
+    print(f"  cycles: {per_scn}")
+
+    # --- coordinate-descent refinement ------------------------------------
+    t0 = time.perf_counter()
+    best = ex.refine(rounds=2, points=7)
+    ref = ex.explore(best[None, :])
+    print(f"\ncoordinate descent ({time.perf_counter() - t0:.2f}s) -> "
+          f"latency {ref.latency[0]:.3f}, cost {ref.cost[0]:.2f}")
+    print("  theta:", {n: round(float(v), 3)
+                       for n, v in zip(ex.space.names, best)})
 
 
 if __name__ == "__main__":

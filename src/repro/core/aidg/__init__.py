@@ -9,6 +9,7 @@ from .builder import (
     longest_path_fixed_point,
 )
 from .maxplus import (
+    fixed_point_batch,
     fixed_point_jax,
     longest_path_blocked,
     longest_path_scan,
@@ -16,12 +17,33 @@ from .maxplus import (
     maxplus_matmul_jnp,
     slot_queue_scan,
 )
-from .dse import DSEProblem, evaluate_theta, make_problem, sweep
+from .dse import (DSEProblem, compiled_sweep, evaluate_theta, make_problem,
+                  sweep)
+from .explorer import (
+    DEFAULT_SPACE,
+    CompiledScenario,
+    DesignSpace,
+    ExplorationResult,
+    Explorer,
+    Knob,
+    Scenario,
+    clear_scenario_cache,
+    compile_scenario,
+    default_scenarios,
+    grid_candidates,
+    pareto_front,
+    random_candidates,
+)
 
 __all__ = [
     "AIDG", "build_aidg", "estimate_cycles", "longest_path",
     "longest_path_fixed_point",
     "longest_path_scan", "longest_path_blocked", "fixed_point_jax",
+    "fixed_point_batch",
     "maxplus_closure", "maxplus_matmul_jnp", "slot_queue_scan",
-    "DSEProblem", "make_problem", "evaluate_theta", "sweep",
+    "DSEProblem", "make_problem", "evaluate_theta", "compiled_sweep", "sweep",
+    "Scenario", "CompiledScenario", "default_scenarios", "compile_scenario",
+    "clear_scenario_cache", "Knob", "DesignSpace", "DEFAULT_SPACE",
+    "grid_candidates", "random_candidates", "pareto_front",
+    "Explorer", "ExplorationResult",
 ]

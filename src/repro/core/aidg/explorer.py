@@ -1,0 +1,534 @@
+"""Batched multi-architecture design-space exploration (DSE) engine.
+
+The paper's payoff (§1/§7) is that the AIDG timing model is fast enough to
+sit *inside* an optimization loop.  ``repro.core.aidg.dse`` delivers that
+for one (architecture, workload) pair; this module scales it to the full
+**scenario matrix**:
+
+    every architecture in ``repro.core.archs.ARCH_REGISTRY``
+        (oma, systolic, gamma, eyeriss, plasticine, tpu_v5e)
+  x every workload mapped onto it
+        (gemm, conv, attention, selective-scan, map-reduce)
+  x thousands of candidate accelerator parameterizations θ
+
+evaluated in batched JAX calls.  The moving parts:
+
+* **Scenario** — a named (arch, workload) cell with a builder that returns
+  a fresh ``(ArchitectureGraph, program)``.  ``default_scenarios()`` yields
+  the built-in matrix; cells that don't map (e.g. conv on OMA) are simply
+  absent.
+* **AIDG cache** — ``compile_scenario`` traces the program, builds the
+  AIDG, and derives the ``DSEProblem`` ONCE per scenario; every subsequent
+  sweep re-uses the cached graph (cold build ≡ cached build, asserted by
+  ``tests/test_dse_explorer.py``).
+* **DesignSpace / Knob** — a small set of named multiplicative latency
+  factors shared ACROSS architectures.  A knob matches op classes and/or
+  storages by regex (e.g. the ``matrix`` knob scales ``gemm@matMulFu#`` on
+  Γ̈ *and* ``gemm@mxu#`` on the TPU model), so one candidate vector
+  parameterizes every scenario at once; unmatched classes stay at θ = 1.
+* **Candidate generators** — ``grid_candidates``, ``random_candidates``,
+  and ``Explorer.refine`` (coordinate descent around the incumbent).
+* **Multi-objective scoring + Pareto frontier** — latency (mean
+  baseline-relative cycles across the matrix) vs. a cost/area proxy
+  (silicon spent speeding a knob up is ∝ the parameter volume the knob
+  governs, divided by θ).  ``pareto_front`` extracts the deterministic
+  non-dominated set.
+
+Worked example (numbers in ``docs/dse.md``, measured by
+``benchmarks/bench_dse.py``)::
+
+    from repro.core.aidg.explorer import Explorer, random_candidates
+    ex = Explorer()                        # full matrix, cached AIDGs
+    cand = random_candidates(ex.space, 1024)
+    res = ex.explore(cand)                 # one batched sweep per scenario
+    for row in res.frontier():             # Pareto-optimal designs
+        print(row)
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..acadl.sim import build_trace, simulate
+from .builder import AIDG, build_aidg, longest_path_fixed_point
+from .dse import DSEProblem, make_problem, sweep
+
+__all__ = [
+    "Scenario", "CompiledScenario", "default_scenarios", "compile_scenario",
+    "clear_scenario_cache", "Knob", "DesignSpace", "DEFAULT_SPACE",
+    "grid_candidates", "random_candidates", "pareto_front",
+    "Explorer", "ExplorationResult",
+]
+
+
+# ---------------------------------------------------------------------------
+# scenarios: the (architecture, workload) matrix
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One cell of the matrix: how to build (AG, program) from scratch.
+
+    ``params`` is the hashable identity of the cell (sizes, unit counts);
+    together with (arch, workload) it keys the AIDG cache.  ``sim_tol`` is
+    the expected relative AIDG-vs-event-simulator error (0.0 = exact)."""
+
+    arch: str
+    workload: str
+    build: Callable[[], Tuple[object, list]]
+    params: Tuple[Tuple[str, object], ...] = ()
+    sim_tol: float = 0.0
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}/{self.workload}"
+
+    @property
+    def key(self) -> Tuple:
+        # the builder's identity participates so two scenarios sharing
+        # (arch, workload, params) but built by different functions don't
+        # silently alias in the AIDG cache
+        return (self.arch, self.workload, self.params,
+                getattr(self.build, "__module__", ""),
+                getattr(self.build, "__qualname__", ""))
+
+
+def _gamma_units(nu: int) -> Tuple[Tuple[str, str, str], ...]:
+    return tuple((f"lsu{k}", f"matMulFu{k}", f"vrf{k}") for k in range(nu))
+
+
+def _attn_units(nu: int) -> Tuple[Tuple[str, str, str], ...]:
+    return tuple((f"lsu{k}", f"matAddFu{k}", f"vrf{k}") for k in range(nu))
+
+
+def _build_oma_gemm(n: int):
+    from ..archs import ARCH_REGISTRY
+    from ..mapping.gemm import init_gemm_memory, oma_gemm_looped
+    ag, _ = ARCH_REGISTRY["oma"]()
+    A = np.ones((n, n))
+    init_gemm_memory(ag, A, A)
+    return ag, oma_gemm_looped(n, n, n)
+
+
+def _build_systolic_gemm(m: int, k: int, l: int, rows: int, cols: int):
+    from ..archs import ARCH_REGISTRY
+    from ..mapping.systolic import init_systolic_memory, systolic_gemm_program
+    ag, _ = ARCH_REGISTRY["systolic"](rows, cols)
+    init_systolic_memory(ag, np.ones((m, k)), np.ones((k, l)))
+    return ag, systolic_gemm_program(m, k, l, rows, cols)
+
+
+def _build_gamma_gemm(n: int, nu: int):
+    from ..archs import ARCH_REGISTRY
+    from ..mapping.gemm import gamma_gemm, init_gemm_memory
+    ag, _ = ARCH_REGISTRY["gamma"](n_units=nu)
+    A = np.ones((n, n), np.float32)
+    init_gemm_memory(ag, A, A, memory="dram0", tile=8)
+    return ag, gamma_gemm(n, n, n, tile=8, units=_gamma_units(nu))
+
+
+def _build_gamma_attention(seq: int, ctx: int, hd: int, nu: int):
+    from ..archs import ARCH_REGISTRY
+    from ..mapping.fused import gamma_attention
+    ag, _ = ARCH_REGISTRY["gamma"](n_units=nu)
+    return ag, gamma_attention(seq, ctx, hd, units=_attn_units(nu))
+
+
+def _build_gamma_scan(tokens: int, d_state: int, nu: int):
+    from ..archs import ARCH_REGISTRY
+    from ..mapping.fused import gamma_scan
+    ag, _ = ARCH_REGISTRY["gamma"](n_units=nu)
+    return ag, gamma_scan(tokens, d_state, units=_attn_units(nu))
+
+
+def _build_eyeriss_conv(ifm_h: int, ifm_w: int, flt: int, rows: int, cols: int):
+    from ..archs import ARCH_REGISTRY
+    from ..mapping.conv import eyeriss_conv2d, init_conv_memory
+    ag, _ = ARCH_REGISTRY["eyeriss"](rows=rows, columns=cols)
+    init_conv_memory(ag, np.ones((ifm_h, ifm_w)), np.ones((flt, flt)))
+    return ag, eyeriss_conv2d(ifm_h, ifm_w, flt, flt, rows, cols)
+
+
+def _build_plasticine_reduce(n: int, npcu: int):
+    from ..archs import ARCH_REGISTRY
+    from ..mapping.patterns import init_vector_memory, plasticine_map_reduce
+    ag, _ = ARCH_REGISTRY["plasticine"](n_pcu=npcu, n_pmu=npcu)
+    init_vector_memory(ag, np.ones(n), npcu)
+    return ag, plasticine_map_reduce(n, npcu, npcu)
+
+
+def _build_tpu(op: str, m: int, k: int, n: int, count: int):
+    from ..archs import ARCH_REGISTRY
+    from ..mapping.workload import OperatorCall, UMA_REGISTRY
+    ag, _ = ARCH_REGISTRY["tpu_v5e"]()
+    fn = UMA_REGISTRY[("tpu_v5e", op)]
+    return ag, fn(OperatorCall(op, m, k, n, count, "dse"))
+
+
+def default_scenarios() -> List[Scenario]:
+    """The built-in matrix: 6 architectures x 5 workload kinds, 10 mapped
+    cells.  Sizes are chosen so every trace builds in well under a second
+    while still exercising multi-unit overlap and storage queueing."""
+
+    def S(arch, wl, fn, *args, tol=0.0, **kw):
+        # the wrapped builder's identity goes into params: every lambda
+        # minted here shares one __qualname__, so Scenario.key's builder
+        # guard alone cannot tell two S(...) cells apart
+        params = ((("__builder__", f"{fn.__module__}.{fn.__qualname__}"),)
+                  + tuple(enumerate(args)) + tuple(sorted(kw.items())))
+        return Scenario(arch, wl, lambda: fn(*args, **kw), params, tol)
+
+    return [
+        S("oma", "gemm", _build_oma_gemm, 6),
+        S("systolic", "gemm", _build_systolic_gemm, 8, 12, 8, 4, 4, tol=0.04),
+        S("gamma", "gemm", _build_gamma_gemm, 32, 2, tol=0.02),
+        S("gamma", "attention", _build_gamma_attention, 32, 64, 8, 2),
+        S("gamma", "scan", _build_gamma_scan, 256, 16, 2),
+        S("eyeriss", "conv", _build_eyeriss_conv, 10, 12, 3, 4, 4, tol=0.08),
+        S("plasticine", "reduce", _build_plasticine_reduce, 1024, 4, tol=0.02),
+        S("tpu_v5e", "gemm", _build_tpu, "gemm", 256, 256, 256, 8, tol=0.02),
+        S("tpu_v5e", "attention", _build_tpu, "attention", 128, 256, 256, 8,
+          tol=0.02),
+        S("tpu_v5e", "scan", _build_tpu, "scan", 128, 512, 2, 8, tol=0.02),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# per-scenario compilation + AIDG cache
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CompiledScenario:
+    """Trace + AIDG + DSEProblem for one cell, built once and re-used by
+    every sweep (the graph is *structure*; θ only re-weights it)."""
+
+    scenario: Scenario
+    aidg: AIDG
+    problem: DSEProblem
+    baseline: float            # fixed-point makespan at θ = 1
+
+    @property
+    def name(self) -> str:
+        return self.scenario.name
+
+    def simulate(self) -> int:
+        """Cycle-accurate oracle: rebuild the AG from scratch (the builder's
+        functional pre-execution mutates memory) and run the event
+        simulator.  Slow — test/benchmark use only."""
+        ag, prog = self.scenario.build()
+        return simulate(ag, prog).cycles
+
+
+_AIDG_CACHE: Dict[Tuple, CompiledScenario] = {}
+
+
+def compile_scenario(sc: Scenario, use_cache: bool = True) -> CompiledScenario:
+    """(arch, workload) -> CompiledScenario, cached on ``Scenario.key``."""
+    if use_cache and sc.key in _AIDG_CACHE:
+        return _AIDG_CACHE[sc.key]
+    ag, prog = sc.build()
+    trace = build_trace(ag, prog)
+    aidg = build_aidg(ag, trace)
+    prob = make_problem(aidg)
+    baseline = float(longest_path_fixed_point(aidg).max())
+    cs = CompiledScenario(sc, aidg, prob, baseline)
+    if use_cache:
+        _AIDG_CACHE[sc.key] = cs
+    return cs
+
+
+def clear_scenario_cache() -> None:
+    _AIDG_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# shared design space: named knobs -> per-scenario θ columns
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Knob:
+    """One shared multiplicative latency factor.
+
+    ``ops`` / ``storages`` are regexes matched (``re.search``) against the
+    DSEProblem's op-class names (e.g. ``gemm@matMulFu#``) and storage names
+    (e.g. ``dram0``).  θ < 1 = faster/more expensive hardware."""
+
+    name: str
+    lo: float = 0.25
+    hi: float = 4.0
+    ops: str = ""
+    storages: str = ""
+
+
+@dataclass(frozen=True)
+class DesignSpace:
+    knobs: Tuple[Knob, ...]
+
+    @property
+    def n(self) -> int:
+        return len(self.knobs)
+
+    @property
+    def names(self) -> List[str]:
+        return [k.name for k in self.knobs]
+
+    def _match(self, patterns: List[str], name: str) -> int:
+        """Index of the first knob whose pattern matches, else ``self.n``
+        (the identity column — that class is not under DSE control)."""
+        for ki, pat in enumerate(patterns):
+            if pat and re.search(pat, name):
+                return ki
+        return self.n
+
+    def projection(self, prob: DSEProblem) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-problem gather maps (op_class -> knob, storage -> knob)."""
+        op_pats = [k.ops for k in self.knobs]
+        st_pats = [k.storages for k in self.knobs]
+        op_idx = np.asarray([self._match(op_pats, nm) for nm in prob.op_names],
+                            dtype=np.int64)
+        st_idx = np.asarray([self._match(st_pats, nm)
+                             for nm in prob.storage_names], dtype=np.int64)
+        return op_idx, st_idx
+
+    def theta_for(self, prob: DSEProblem, knob_thetas: np.ndarray,
+                  projection: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """(B, n_knobs) shared candidates -> (B, n_op), (B, n_st) θ for one
+        scenario's problem; unmatched classes get the identity 1.0."""
+        kt = np.asarray(knob_thetas, np.float32)
+        if kt.ndim == 1:
+            kt = kt[None, :]
+        if kt.shape[1] != self.n:
+            raise ValueError(f"candidates have {kt.shape[1]} knobs, "
+                             f"space has {self.n}")
+        op_idx, st_idx = projection or self.projection(prob)
+        padded = np.concatenate(
+            [kt, np.ones((kt.shape[0], 1), np.float32)], axis=1)
+        return padded[:, op_idx], padded[:, st_idx]
+
+    def clip(self, knob_thetas: np.ndarray) -> np.ndarray:
+        lo = np.asarray([k.lo for k in self.knobs], np.float32)
+        hi = np.asarray([k.hi for k in self.knobs], np.float32)
+        return np.clip(np.asarray(knob_thetas, np.float32), lo, hi)
+
+
+DEFAULT_SPACE = DesignSpace((
+    # compute: matrix-shaped units (MXU / MAC array / conv PE) vs.
+    # vector/elementwise units (VPU, matAddFu, map/reduce pipelines)
+    Knob("matrix", ops=r"gemm@|^mac|row_conv@"),
+    Knob("vector", ops=r"attn@|scan@|matadd@|map@|reduce@|psum_add"),
+    Knob("loadstore", ops=r"t_load@|t_store@|^load@|^store@|drain@"),
+    # memory hierarchy: on-chip SRAM-class storage vs. external DRAM/HBM
+    Knob("onchip", storages=r"spm|glb|pmu|vmem|sram|imem|cache"),
+    Knob("dram", storages=r"dram|hbm"),
+))
+
+
+# ---------------------------------------------------------------------------
+# candidate generators
+# ---------------------------------------------------------------------------
+
+
+def random_candidates(space: DesignSpace, n: int, seed: int = 0,
+                      include_baseline: bool = True) -> np.ndarray:
+    """(n, n_knobs) log-uniform samples of the knob box (row 0 = θ = 1 when
+    ``include_baseline``, so every batch carries the reference machine)."""
+    rng = np.random.default_rng(seed)
+    cols = [np.exp(rng.uniform(np.log(k.lo), np.log(k.hi), n))
+            for k in space.knobs]
+    out = np.stack(cols, axis=1).astype(np.float32)
+    if include_baseline and n > 0:
+        out[0] = 1.0
+    return out
+
+
+def grid_candidates(space: DesignSpace, points: int = 4) -> np.ndarray:
+    """Full factorial grid, ``points`` log-spaced levels per knob ->
+    (points ** n_knobs, n_knobs) candidates in deterministic C order."""
+    axes = [np.geomspace(k.lo, k.hi, points) for k in space.knobs]
+    mesh = np.meshgrid(*axes, indexing="ij")
+    return np.stack([m.reshape(-1) for m in mesh], axis=1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# multi-objective scoring + Pareto frontier
+# ---------------------------------------------------------------------------
+
+
+def pareto_front(objectives: np.ndarray) -> np.ndarray:
+    """Indices of the non-dominated rows of a (B, 2) minimization problem,
+    sorted by the first objective.  Deterministic: ties broken by original
+    row order (stable lexsort); exact duplicates keep the first row only."""
+    objs = np.asarray(objectives, np.float64)
+    assert objs.ndim == 2 and objs.shape[1] == 2
+    order = np.lexsort((objs[:, 1], objs[:, 0]))
+    keep: List[int] = []
+    best1 = np.inf
+    for i in order:
+        if objs[i, 1] < best1:
+            keep.append(int(i))
+            best1 = objs[i, 1]
+    return np.asarray(keep, dtype=np.int64)
+
+
+@dataclass
+class ExplorationResult:
+    """One batched sweep over the matrix: per-candidate cycles per scenario
+    plus the two scalar objectives and their Pareto-optimal subset."""
+
+    space: DesignSpace
+    scenario_names: List[str]
+    candidates: np.ndarray      # (B, n_knobs)
+    cycles: np.ndarray          # (B, S)
+    latency: np.ndarray         # (B,)  mean baseline-relative cycles
+    cost: np.ndarray            # (B,)  area proxy
+    pareto: np.ndarray          # indices into candidates, sorted by latency
+
+    def frontier(self) -> List[Dict[str, float]]:
+        rows = []
+        for i in self.pareto:
+            row = {"index": int(i), "latency": float(self.latency[i]),
+                   "cost": float(self.cost[i])}
+            row.update({f"theta[{n}]": float(self.candidates[i, j])
+                        for j, n in enumerate(self.space.names)})
+            rows.append(row)
+        return rows
+
+    @property
+    def best(self) -> int:
+        """Candidate minimizing latency * cost (a scalar compromise)."""
+        return int(np.argmin(self.latency * self.cost))
+
+
+class Explorer:
+    """The batched multi-architecture DSE engine.
+
+    Compiles every scenario once (AIDG cache), projects shared knob vectors
+    to per-scenario θ, and evaluates candidate batches with one cached
+    jit(vmap) sweep per scenario — thousands of (arch, workload, θ) cells
+    per call, no graph rebuilds, no retracing.
+    """
+
+    def __init__(self, scenarios: Optional[Sequence[Scenario]] = None,
+                 space: DesignSpace = DEFAULT_SPACE, n_iters: int = 2,
+                 use_cache: bool = True):
+        self.space = space
+        self.n_iters = n_iters
+        self.compiled: List[CompiledScenario] = [
+            compile_scenario(s, use_cache)
+            for s in (default_scenarios() if scenarios is None else scenarios)]
+        self._projections = [space.projection(cs.problem)
+                             for cs in self.compiled]
+        self._weights: Optional[np.ndarray] = None
+        # normalization denominators from the SAME evaluator the sweeps use
+        # (compiled_sweep at θ = 1), so the baseline candidate's latency is
+        # exactly 1.0 per scenario — CompiledScenario.baseline comes from
+        # the numpy fixed-point pass, whose iteration count/early-stop can
+        # differ by a fraction of a cycle
+        self._baselines = self.evaluate(np.ones((1, space.n), np.float32))[0]
+
+    @property
+    def scenario_names(self) -> List[str]:
+        return [cs.name for cs in self.compiled]
+
+    @property
+    def baselines(self) -> np.ndarray:
+        return self._baselines
+
+    # -- cost/area proxy ----------------------------------------------------
+
+    def knob_weights(self) -> np.ndarray:
+        """Area weight per knob ∝ the parameter volume it governs: summed
+        instruction op_scale (macs/words) for op knobs and summed mem_words
+        for storage knobs, across the whole matrix, normalized to mean 1."""
+        if self._weights is not None:
+            return self._weights
+        w = np.zeros(self.space.n, dtype=np.float64)
+        for cs, (op_idx, st_idx) in zip(self.compiled, self._projections):
+            aidg = cs.aidg
+            node_knob = op_idx[aidg.op_class]
+            for ki in range(self.space.n):
+                w[ki] += float(aidg.op_scale[node_knob == ki].sum())
+            for st_name, cid in cs.problem.node_storage.items():
+                ki = st_idx[cid]
+                if ki < self.space.n:
+                    nodes = aidg.storage_nodes[st_name]
+                    w[ki] += float(aidg.mem_words[nodes].sum())
+        total = w.sum()
+        if total <= 0:
+            w[:] = 1.0
+        else:
+            w = w / total * self.space.n
+        self._weights = w
+        return w
+
+    def cost_proxy(self, knob_thetas: np.ndarray) -> np.ndarray:
+        """Silicon-area proxy: speeding a knob up (θ < 1) costs area in
+        proportion to the parameter volume it governs — Σ_k w_k / θ_k."""
+        kt = np.asarray(knob_thetas, np.float64)
+        if kt.ndim == 1:
+            kt = kt[None, :]
+        return (self.knob_weights()[None, :] / kt).sum(axis=1)
+
+    # -- batched evaluation -------------------------------------------------
+
+    def evaluate(self, knob_thetas: np.ndarray,
+                 chunk: Optional[int] = None) -> np.ndarray:
+        """(B, n_knobs) candidates -> (B, S) estimated cycles.  One batched
+        sweep per scenario over cached AIDGs and cached compiled kernels."""
+        kt = np.asarray(knob_thetas, np.float32)
+        if kt.ndim == 1:
+            kt = kt[None, :]
+        cols = []
+        for cs, proj in zip(self.compiled, self._projections):
+            to, ts = self.space.theta_for(cs.problem, kt, proj)
+            cols.append(sweep(cs.problem, to, ts, n_iters=self.n_iters,
+                              chunk=chunk))
+        return np.stack(cols, axis=1)
+
+    def explore(self, knob_thetas: np.ndarray,
+                chunk: Optional[int] = None) -> ExplorationResult:
+        """Evaluate + score + Pareto-extract one candidate batch."""
+        kt = np.asarray(knob_thetas, np.float32)
+        if kt.ndim == 1:
+            kt = kt[None, :]
+        cycles = self.evaluate(kt, chunk=chunk)
+        latency = (cycles / self.baselines[None, :]).mean(axis=1)
+        cost = self.cost_proxy(kt)
+        front = pareto_front(np.stack([latency, cost], axis=1))
+        return ExplorationResult(self.space, self.scenario_names, kt, cycles,
+                                 latency, cost, front)
+
+    # -- coordinate-descent refinement -------------------------------------
+
+    def refine(self, start: Optional[np.ndarray] = None, rounds: int = 2,
+               points: int = 9, objective: str = "product") -> np.ndarray:
+        """Deterministic coordinate descent: sweep one knob at a time over
+        ``points`` log-spaced levels (others fixed), keep the argmin, and
+        cycle ``rounds`` times.  ``objective``: 'product' minimizes
+        latency * cost; 'latency' ignores cost (pure speed)."""
+        if objective not in ("product", "latency"):
+            raise ValueError(f"objective must be 'product' or 'latency', "
+                             f"got {objective!r}")
+        cur = (np.ones(self.space.n, np.float32) if start is None
+               else self.space.clip(start).copy())
+        for _ in range(rounds):
+            for ki, knob in enumerate(self.space.knobs):
+                # the incumbent value is always a candidate level, so a
+                # coordinate step can never regress from an off-grid start
+                levels = np.append(np.geomspace(knob.lo, knob.hi, points),
+                                   cur[ki]).astype(np.float32)
+                cand = np.repeat(cur[None, :], len(levels), axis=0)
+                cand[:, ki] = levels
+                res = self.explore(cand)
+                score = (res.latency if objective == "latency"
+                         else res.latency * res.cost)
+                cur = cand[int(np.argmin(score))]
+        return cur

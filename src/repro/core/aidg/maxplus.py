@@ -32,6 +32,7 @@ __all__ = [
     "longest_path_blocked",
     "slot_queue_scan",
     "fixed_point_jax",
+    "fixed_point_batch",
 ]
 
 NEG = -1e18
@@ -206,3 +207,44 @@ def fixed_point_jax(aidg: AIDG, n_iters: int = 3,
             b = b.at[nd[order]].max(need)
         t = _scan_impl(n, w, b, preds, extra)
     return t
+
+
+def fixed_point_batch(aidg: AIDG, works: Optional[jnp.ndarray] = None,
+                      bases: Optional[jnp.ndarray] = None,
+                      storage_lats: Optional[Dict[str, jnp.ndarray]] = None,
+                      n_iters: int = 3) -> jnp.ndarray:
+    """Batched ``fixed_point_jax``: any of ``works`` (B, n), ``bases``
+    (B, n), ``storage_lats`` {name: (B, k)} may carry a leading batch axis;
+    omitted inputs broadcast from the AIDG baseline.  Returns (B, n)
+    completion times in one vmapped device launch — the raw-latency-space
+    counterpart of ``dse.sweep`` (which batches multiplicative θ factors).
+    """
+    batched = [x for x in (works, bases) if x is not None]
+    if storage_lats is not None:
+        unknown = set(storage_lats) - set(aidg.storage_lat)
+        if unknown:
+            raise KeyError(f"unknown storage(s) {sorted(unknown)}; "
+                           f"AIDG has {sorted(aidg.storage_lat)}")
+        batched.extend(storage_lats.values())
+    if not batched:
+        raise ValueError("fixed_point_batch needs at least one batched input")
+    shapes = [np.shape(x) for x in batched]
+    if any(len(s) != 2 for s in shapes) or len({s[0] for s in shapes}) != 1:
+        raise ValueError(f"batched inputs must be 2-D with one shared "
+                         f"leading batch dim, got shapes {shapes}")
+    B = batched[0].shape[0]
+    w = (jnp.broadcast_to(jnp.asarray(aidg.work, jnp.float32), (B, aidg.n))
+         if works is None else jnp.asarray(works, jnp.float32))
+    b = (jnp.broadcast_to(jnp.asarray(aidg.base, jnp.float32), (B, aidg.n))
+         if bases is None else jnp.asarray(bases, jnp.float32))
+    sl = {name: (jnp.broadcast_to(jnp.asarray(lat, jnp.float32),
+                                  (B, len(lat)))
+                 if storage_lats is None or name not in storage_lats
+                 else jnp.asarray(storage_lats[name], jnp.float32))
+          for name, lat in aidg.storage_lat.items()}
+
+    def one(w_, b_, sl_):
+        return fixed_point_jax(aidg, n_iters=n_iters, work=w_, base=b_,
+                               storage_lat=sl_)
+
+    return jax.vmap(one)(w, b, sl)

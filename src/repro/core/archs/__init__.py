@@ -16,6 +16,18 @@ from .eyeriss import EyerissPE, generate_eyeriss, make_eyeriss_ag
 from .plasticine import generate_plasticine, make_plasticine_ag
 from .tpu_v5e import TPU_V5E, generate_tpu_v5e, make_tpu_v5e_ag
 
+# name -> AG factory, the uniform handle the DSE scenario matrix
+# (repro.core.aidg.explorer) iterates over.  Factories take their
+# arch-specific sizing kwargs and return (ArchitectureGraph, handles).
+ARCH_REGISTRY = {
+    "oma": make_oma_ag,
+    "systolic": make_systolic_ag,
+    "gamma": make_gamma_ag,
+    "eyeriss": make_eyeriss_ag,
+    "plasticine": make_plasticine_ag,
+    "tpu_v5e": make_tpu_v5e_ag,
+}
+
 __all__ = [
     "generate_oma", "make_oma_ag", "OMA_SCALAR_OPS",
     "ProcessingElement", "LoadUnit", "StoreUnit", "FetchUnit",
@@ -24,4 +36,5 @@ __all__ = [
     "EyerissPE", "generate_eyeriss", "make_eyeriss_ag",
     "generate_plasticine", "make_plasticine_ag",
     "TPU_V5E", "generate_tpu_v5e", "make_tpu_v5e_ag",
+    "ARCH_REGISTRY",
 ]

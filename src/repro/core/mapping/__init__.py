@@ -9,6 +9,7 @@ from .workload import (OperatorCall, UMA_REGISTRY, extract_operators,
 from .conv import eyeriss_conv2d, init_conv_memory, read_conv_result
 from .patterns import (init_vector_memory, plasticine_map_reduce,
                        read_scalar)
+from .fused import gamma_attention, gamma_scan
 
 __all__ = [
     "oma_gemm_looped", "oma_gemm_unrolled", "gamma_gemm",
@@ -18,4 +19,5 @@ __all__ = [
     "UMA_REGISTRY", "register_operator",
     "eyeriss_conv2d", "init_conv_memory", "read_conv_result",
     "plasticine_map_reduce", "init_vector_memory", "read_scalar",
+    "gamma_attention", "gamma_scan",
 ]

@@ -1,9 +1,16 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Skipped cleanly when ``hypothesis`` is not installed (it is a dev-only
+dependency — see pyproject.toml ``[project.optional-dependencies] dev``).
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.acadl.storage import SetAssociativeCache
 from repro.core.aidg import build_aidg, longest_path
