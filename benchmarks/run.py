@@ -1,20 +1,42 @@
 """Benchmark harness — one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (and writes bench_output.txt is the
-caller's job via tee).  Usage: PYTHONPATH=src python -m benchmarks.run
+caller's job via tee).
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only SECTION[,SECTION]]
+
+``--only dse`` runs just the DSE sections (what the CI smoke step uses,
+together with ``BENCH_BUDGET=small``); sections: paper, dse, workloads,
+kernels.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 from typing import Dict, List
 
 
-def main() -> int:
+def main(argv: List[str] = None) -> int:
     from . import bench_dse, bench_kernels, bench_paper, bench_workloads
 
+    sections = {"paper": bench_paper, "dse": bench_dse,
+                "workloads": bench_workloads, "kernels": bench_kernels}
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of sections: "
+                         + ",".join(sections))
+    args = ap.parse_args(argv)
+    if args.only:
+        unknown = set(args.only.split(",")) - set(sections)
+        if unknown:
+            ap.error(f"unknown section(s) {sorted(unknown)}")
+        mods = [sections[s] for s in args.only.split(",")]
+    else:
+        mods = list(sections.values())
+
     rows: List[Dict] = []
-    for mod in (bench_paper, bench_dse, bench_workloads, bench_kernels):
+    for mod in mods:
         mod.run(rows)
 
     print("name,us_per_call,derived")

@@ -27,7 +27,10 @@ def main():
     print(f"scenario matrix ({len(names)} cells, "
           f"compiled in {time.perf_counter() - t0:.2f}s):")
     for cs in ex.compiled:
+        s = cs.schedule
         print(f"  {cs.name:20s} {cs.aidg.n:5d} instructions, "
+              f"{s.n_levels:5d} wavefront levels "
+              f"({s.parallelism:4.1f}x parallel), "
               f"baseline {cs.baseline:8.0f} cycles")
 
     # --- candidates: full factorial grid + log-uniform random ------------

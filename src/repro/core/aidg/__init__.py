@@ -1,18 +1,26 @@
 """AIDG: Architectural Instruction Dependency Graph fast estimation
-(paper §6, [16]) — numpy exact path, JAX max-plus paths, DSE sweeps."""
+(paper §6, [16]) — numpy exact path, compiled JAX max-plus engines
+(trace → AIDG → LevelSchedule → CompiledAIDG), DSE sweeps."""
 
 from .builder import (
     AIDG,
+    CompiledAIDG,
+    LevelSchedule,
     build_aidg,
+    compile_aidg,
+    compute_level_schedule,
     estimate_cycles,
     longest_path,
     longest_path_fixed_point,
 )
 from .maxplus import (
+    DEFAULT_ENGINE,
+    ENGINES,
     fixed_point_batch,
     fixed_point_jax,
     longest_path_blocked,
     longest_path_scan,
+    longest_path_wavefront,
     maxplus_closure,
     maxplus_matmul_jnp,
     slot_queue_scan,
@@ -36,10 +44,12 @@ from .explorer import (
 )
 
 __all__ = [
-    "AIDG", "build_aidg", "estimate_cycles", "longest_path",
+    "AIDG", "CompiledAIDG", "LevelSchedule", "build_aidg", "compile_aidg",
+    "compute_level_schedule", "estimate_cycles", "longest_path",
     "longest_path_fixed_point",
-    "longest_path_scan", "longest_path_blocked", "fixed_point_jax",
-    "fixed_point_batch",
+    "ENGINES", "DEFAULT_ENGINE",
+    "longest_path_wavefront", "longest_path_scan", "longest_path_blocked",
+    "fixed_point_jax", "fixed_point_batch",
     "maxplus_closure", "maxplus_matmul_jnp", "slot_queue_scan",
     "DSEProblem", "make_problem", "evaluate_theta", "compiled_sweep", "sweep",
     "Scenario", "CompiledScenario", "default_scenarios", "compile_scenario",

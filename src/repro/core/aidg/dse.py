@@ -24,8 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .builder import AIDG, longest_path_fixed_point
-from .maxplus import fixed_point_jax
+from .builder import AIDG, CompiledAIDG, compile_aidg, longest_path_fixed_point
+from .maxplus import DEFAULT_ENGINE, fixed_point_jax
 
 __all__ = ["DSEProblem", "make_problem", "evaluate_theta", "compiled_sweep",
            "sweep"]
@@ -38,10 +38,15 @@ class DSEProblem:
     storage_names: List[str]     # storage-class index -> name
     # per-node gather indices
     node_op: np.ndarray          # (n,) int32
-    node_storage: Dict[str, int] = None  # storage name -> class id
-    # n_iters -> jitted vmapped evaluator (jax.jit caches by function
-    # identity, so re-creating the lambda per sweep() would re-trace)
-    _compiled: Dict[int, Callable] = field(default_factory=dict, repr=False)
+    node_storage: Dict[str, int] = field(default_factory=dict)  # name -> id
+    # build-time compilation artifact (level schedule + padded gathers),
+    # shared by every sweep over this problem
+    caidg: Optional[CompiledAIDG] = None
+    # (n_iters, engine) -> jitted vmapped evaluator (jax.jit caches by
+    # function identity, so re-creating the lambda per sweep() would
+    # re-trace)
+    _compiled: Dict[Tuple[int, str], Callable] = field(default_factory=dict,
+                                                       repr=False)
 
     @property
     def n_op(self) -> int:
@@ -51,6 +56,12 @@ class DSEProblem:
     def n_st(self) -> int:
         return len(self.storage_names)
 
+    @property
+    def compiled_aidg(self) -> CompiledAIDG:
+        if self.caidg is None:  # hand-built problems compile lazily
+            self.caidg = compile_aidg(self.aidg)
+        return self.caidg
+
 
 def make_problem(aidg: AIDG) -> DSEProblem:
     op_names = [None] * len(aidg.classes)
@@ -59,7 +70,8 @@ def make_problem(aidg: AIDG) -> DSEProblem:
     st_names = sorted(aidg.storage_nodes.keys())
     return DSEProblem(aidg=aidg, op_names=op_names, storage_names=st_names,
                       node_op=aidg.op_class,
-                      node_storage={s: i for i, s in enumerate(st_names)})
+                      node_storage={s: i for i, s in enumerate(st_names)},
+                      caidg=compile_aidg(aidg))
 
 
 def _reweight(prob: DSEProblem, theta_op: jnp.ndarray, theta_st: jnp.ndarray
@@ -78,32 +90,38 @@ def _reweight(prob: DSEProblem, theta_op: jnp.ndarray, theta_st: jnp.ndarray
 
 
 def evaluate_theta(prob: DSEProblem, theta_op: jnp.ndarray,
-                   theta_st: jnp.ndarray, n_iters: int = 2) -> jnp.ndarray:
+                   theta_st: jnp.ndarray, n_iters: int = 2,
+                   engine: str = DEFAULT_ENGINE) -> jnp.ndarray:
     """Estimated cycles for one parameter point (jit/vmap-able)."""
     work, st_lat, fu = _reweight(prob, theta_op, theta_st)
-    aidg = prob.aidg
     # fixed_point_jax reads fu_lat for the queueing fold-back; the scaled fu
     # enters through `work`, so pass base/work/storage latencies explicitly.
-    t = fixed_point_jax(aidg, n_iters=n_iters, work=work, storage_lat=st_lat)
+    # The CompiledAIDG carries the level schedule, built once per scenario.
+    t = fixed_point_jax(prob.compiled_aidg, n_iters=n_iters, work=work,
+                        storage_lat=st_lat, engine=engine)
     return t.max()
 
 
-def compiled_sweep(prob: DSEProblem, n_iters: int = 2) -> Callable:
+def compiled_sweep(prob: DSEProblem, n_iters: int = 2,
+                   engine: str = DEFAULT_ENGINE) -> Callable:
     """Cached jit(vmap) evaluator for ``prob``: (B, n_op), (B, n_st) ->
-    (B,) cycles.  The first call per (problem, n_iters) traces; every later
-    sweep over the same AIDG re-uses the compiled kernel — the property the
-    multi-scenario explorer relies on for its configs/sec throughput."""
-    fn = prob._compiled.get(n_iters)
+    (B,) cycles.  The first call per (problem, n_iters, engine) traces;
+    every later sweep over the same AIDG re-uses the compiled kernel — the
+    property the multi-scenario explorer relies on for its configs/sec
+    throughput."""
+    fn = prob._compiled.get((n_iters, engine))
     if fn is None:
-        f = lambda to, ts: evaluate_theta(prob, to, ts, n_iters=n_iters)
+        f = lambda to, ts: evaluate_theta(prob, to, ts, n_iters=n_iters,
+                                          engine=engine)
         fn = jax.jit(jax.vmap(f))
-        prob._compiled[n_iters] = fn
+        prob._compiled[(n_iters, engine)] = fn
     return fn
 
 
 def sweep(prob: DSEProblem, thetas_op: np.ndarray, thetas_st: np.ndarray,
           n_iters: int = 2, batched: bool = True,
-          chunk: Optional[int] = None) -> np.ndarray:
+          chunk: Optional[int] = None,
+          engine: str = DEFAULT_ENGINE) -> np.ndarray:
     """Evaluate a batch of candidate accelerators.
 
     ``thetas_op``: (B, n_op), ``thetas_st``: (B, n_st) -> (B,) cycles.
@@ -113,14 +131,19 @@ def sweep(prob: DSEProblem, thetas_op: np.ndarray, thetas_st: np.ndarray,
     ``chunk``: split very large batches into fixed-size device launches to
     bound peak memory (the tail chunk is padded to ``chunk`` rows so the
     compiled kernel is reused rather than re-traced per remainder shape).
+
+    ``engine``: the DAG relaxation used inside the fixed point —
+    ``"wavefront"`` (default, level-scheduled), ``"scan"`` (per-node), or
+    ``"blocked"`` (max-plus closure blocks).
     """
     if chunk is not None and chunk <= 0:
         raise ValueError(f"chunk must be positive, got {chunk}")
     if not batched:
-        f = lambda to, ts: evaluate_theta(prob, to, ts, n_iters=n_iters)
+        f = lambda to, ts: evaluate_theta(prob, to, ts, n_iters=n_iters,
+                                          engine=engine)
         return np.asarray([f(jnp.asarray(a), jnp.asarray(b))
                            for a, b in zip(thetas_op, thetas_st)])
-    fn = compiled_sweep(prob, n_iters)
+    fn = compiled_sweep(prob, n_iters, engine)
     to = jnp.asarray(thetas_op, jnp.float32)
     ts = jnp.asarray(thetas_st, jnp.float32)
     B = to.shape[0]

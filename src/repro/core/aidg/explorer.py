@@ -54,8 +54,10 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..acadl.sim import build_trace, simulate
-from .builder import AIDG, build_aidg, longest_path_fixed_point
+from .builder import (AIDG, CompiledAIDG, LevelSchedule, build_aidg,
+                      longest_path_fixed_point)
 from .dse import DSEProblem, make_problem, sweep
+from .maxplus import DEFAULT_ENGINE, ENGINES
 
 __all__ = [
     "Scenario", "CompiledScenario", "default_scenarios", "compile_scenario",
@@ -216,6 +218,16 @@ class CompiledScenario:
     @property
     def name(self) -> str:
         return self.scenario.name
+
+    @property
+    def compiled_aidg(self) -> CompiledAIDG:
+        return self.problem.compiled_aidg
+
+    @property
+    def schedule(self) -> LevelSchedule:
+        """The build-time level schedule (trace → AIDG → LevelSchedule →
+        CompiledAIDG): n_levels sequential wavefront steps instead of n."""
+        return self.compiled_aidg.schedule
 
     def simulate(self) -> int:
         """Cycle-accurate oracle: rebuild the AG from scratch (the builder's
@@ -410,17 +422,26 @@ class ExplorationResult:
 class Explorer:
     """The batched multi-architecture DSE engine.
 
-    Compiles every scenario once (AIDG cache), projects shared knob vectors
-    to per-scenario θ, and evaluates candidate batches with one cached
-    jit(vmap) sweep per scenario — thousands of (arch, workload, θ) cells
-    per call, no graph rebuilds, no retracing.
+    Compiles every scenario once (AIDG cache + level schedule), projects
+    shared knob vectors to per-scenario θ, and evaluates candidate batches
+    with one cached jit(vmap) sweep per scenario — thousands of (arch,
+    workload, θ) cells per call, no graph rebuilds, no retracing.
+
+    ``engine`` selects the max-plus relaxation inside every sweep:
+    ``"wavefront"`` (default — a ``lax.scan`` over topological levels,
+    sequential depth = the DAG's critical depth), ``"scan"`` (one step per
+    node), or ``"blocked"`` (max-plus Kleene-closure blocks).
     """
 
     def __init__(self, scenarios: Optional[Sequence[Scenario]] = None,
                  space: DesignSpace = DEFAULT_SPACE, n_iters: int = 2,
-                 use_cache: bool = True):
+                 use_cache: bool = True, engine: str = DEFAULT_ENGINE):
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; "
+                             f"choose from {ENGINES}")
         self.space = space
         self.n_iters = n_iters
+        self.engine = engine
         self.compiled: List[CompiledScenario] = [
             compile_scenario(s, use_cache)
             for s in (default_scenarios() if scenarios is None else scenarios)]
@@ -441,6 +462,18 @@ class Explorer:
     @property
     def baselines(self) -> np.ndarray:
         return self._baselines
+
+    def level_stats(self) -> List[Dict[str, float]]:
+        """Per-scenario level-schedule statistics: node count vs critical
+        depth — the sequential-step compression the wavefront engine gets
+        over the per-node scan."""
+        rows = []
+        for cs in self.compiled:
+            s = cs.schedule
+            rows.append({"name": cs.name, "n": s.n, "levels": s.n_levels,
+                         "max_width": s.width,
+                         "parallelism": round(s.parallelism, 2)})
+        return rows
 
     # -- cost/area proxy ----------------------------------------------------
 
@@ -490,7 +523,7 @@ class Explorer:
         for cs, proj in zip(self.compiled, self._projections):
             to, ts = self.space.theta_for(cs.problem, kt, proj)
             cols.append(sweep(cs.problem, to, ts, n_iters=self.n_iters,
-                              chunk=chunk))
+                              chunk=chunk, engine=self.engine))
         return np.stack(cols, axis=1)
 
     def explore(self, knob_thetas: np.ndarray,

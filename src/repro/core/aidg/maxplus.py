@@ -1,15 +1,27 @@
 """Max-plus evaluation of the AIDG in JAX (the TPU-native adaptation).
 
-Two evaluators of the same recurrence  t_i = w_i + max(base_i, max_j (t_j + d_ji)):
+Three engines for the same recurrence  t_i = w_i + max(base_i, max_j (t_j + d_ji)),
+all consuming the build-time ``CompiledAIDG`` artifact
+(trace → AIDG → LevelSchedule → CompiledAIDG, see ``builder.compile_aidg``):
 
-* ``longest_path_scan`` — exact forward pass as a ``jax.lax.scan`` over
-  nodes with padded predecessor gathers.  Differentiable in the latency
-  parameters and ``vmap``-able over parameter batches (the DSE fast path).
+* ``longest_path_wavefront`` — the default: a ``jax.lax.scan`` over
+  topological *levels* with vectorized predecessor gathers and a max over
+  the predecessor axis inside each level.  Sequential depth is the DAG's
+  critical depth (``LevelSchedule.n_levels``), typically far smaller than
+  the node count — the compiled-estimator payoff of Lübeck et al. 2024.
+* ``longest_path_scan`` — exact forward pass as a ``lax.scan`` over nodes
+  (one sequential step per instruction); kept as the reference device path.
 * ``longest_path_blocked`` — the AIDG adjacency banded into dense blocks;
   each block solved by the max-plus Kleene closure  t_b = M*_b ⊗ h_b  with
-  M* computed by repeated max-plus squaring — the matmul-shaped formulation
-  the ``repro.kernels.maxplus`` Pallas kernel accelerates on the MXU-aligned
-  layout (max/add on the VPU instead of mul/add on the MXU).
+  M* computed by repeated max-plus squaring, the whole block recurrence a
+  single device-resident ``lax.scan``.  ``matmul=maxplus_matmul_pallas``
+  routes every ⊗ through the ``repro.kernels.maxplus`` Pallas kernel
+  (max/add on the VPU in the MXU-aligned layout).
+
+All three are differentiable in the latency parameters and ``vmap``-able
+over parameter batches; ``fixed_point_jax(engine=...)`` selects the
+relaxation used between storage-queueing folds, and ``fixed_point_batch``
+vmaps the whole fixed point.
 
 The storage request-slot queueing (arrival-ordered service, Figs. 12/13) is
 ``slot_queue_scan``: per storage, accesses sorted by arrival relax against a
@@ -19,23 +31,42 @@ sorted slot vector via ``lax.scan`` — also vmappable over parameters.
 from __future__ import annotations
 
 from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .builder import AIDG
+from .builder import AIDG, CompiledAIDG, compile_aidg
 
 __all__ = [
+    "ENGINES",
+    "DEFAULT_ENGINE",
+    "longest_path_wavefront",
     "longest_path_scan",
     "longest_path_blocked",
     "slot_queue_scan",
     "fixed_point_jax",
     "fixed_point_batch",
+    "maxplus_matmul_jnp",
+    "maxplus_closure",
 ]
 
 NEG = -1e18
+
+ENGINES = ("wavefront", "scan", "blocked")
+DEFAULT_ENGINE = "wavefront"
+
+AIDGLike = Union[AIDG, CompiledAIDG]
+
+
+def _as_compiled(aidg: AIDGLike) -> CompiledAIDG:
+    return aidg if isinstance(aidg, CompiledAIDG) else compile_aidg(aidg)
+
+
+# ---------------------------------------------------------------------------
+# per-node scan evaluation (reference device path)
+# ---------------------------------------------------------------------------
 
 
 @partial(jax.jit, static_argnames=("n",))
@@ -55,50 +86,73 @@ def _scan_impl(n: int, work: jnp.ndarray, base: jnp.ndarray,
     return t
 
 
-def longest_path_scan(aidg: AIDG, work: Optional[jnp.ndarray] = None,
+def longest_path_scan(aidg: AIDGLike, work: Optional[jnp.ndarray] = None,
                       base: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    w = jnp.asarray(aidg.work if work is None else work, jnp.float32)
-    b = jnp.asarray(aidg.base if base is None else base, jnp.float32)
-    return _scan_impl(aidg.n, w, b, jnp.asarray(aidg.preds),
-                      jnp.asarray(aidg.pred_extra))
+    ca = _as_compiled(aidg)
+    a = ca.aidg
+    w = jnp.asarray(a.work if work is None else work, jnp.float32)
+    b = jnp.asarray(a.base if base is None else base, jnp.float32)
+    return _scan_impl(a.n, w, b, jnp.asarray(a.preds),
+                      jnp.asarray(a.pred_extra))
 
 
 # ---------------------------------------------------------------------------
-# blocked max-plus closure evaluation
+# level-scheduled wavefront evaluation (the default engine)
 # ---------------------------------------------------------------------------
 
 
-def _block_matrices(aidg: AIDG, block: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Dense per-block edge matrices.
+@partial(jax.jit, static_argnames=("n", "width"))
+def _wavefront_impl(n: int, width: int, work: jnp.ndarray, base: jnp.ndarray,
+                    preds_lv: jnp.ndarray, extra_lv: jnp.ndarray,
+                    starts: jnp.ndarray, order: jnp.ndarray,
+                    rank: jnp.ndarray) -> jnp.ndarray:
+    """One ``lax.scan`` step per *level* over the level-major renumbering:
+    each step slices a contiguous ``width`` window of (preds, extra, work,
+    base), gathers the (strictly shallower, already-final) predecessor
+    times, reduces over the predecessor axis, and writes the window back
+    with one dynamic-update-slice — no scatters.  Window lanes that spill
+    past the level's true extent compute garbage from not-yet-final inputs
+    and are deterministically overwritten when their own level runs."""
+    work_lv = jnp.concatenate(
+        [work.astype(jnp.float32)[order], jnp.zeros((width,), jnp.float32)])
+    base_lv = jnp.concatenate(
+        [base.astype(jnp.float32)[order], jnp.full((width,), NEG, jnp.float32)])
+    p = preds_lv.shape[1]
 
-    Returns (M_diag, M_sub, far_mask) where for each block b:
-    ``M_diag[b][i, j]`` is the weight of edge (local j -> local i) inside the
-    block (-inf if absent) *with w_i absorbed* (m_ij = d_ij + w_i), and
-    ``M_sub[b][i, j]`` the edges from the previous block.  Edges reaching
-    further back are returned as an explicit gather list folded into h.
-    """
-    n = aidg.n
-    nb = (n + block - 1) // block
-    Md = np.full((nb, block, block), NEG, dtype=np.float32)
-    Ms = np.full((nb, block, block), NEG, dtype=np.float32)
-    far: Dict[Tuple[int, int], float] = {}
-    for i in range(n):
-        bi, li = divmod(i, block)
-        for k in range(aidg.preds.shape[1]):
-            j = int(aidg.preds[i, k])
-            if j < 0:
-                break
-            wgt = float(aidg.pred_extra[i, k]) + float(aidg.work[i])
-            bj, lj = divmod(j, block)
-            if bj == bi:
-                Md[bi, li, lj] = max(Md[bi, li, lj], wgt)
-            elif bj == bi - 1:
-                Ms[bi, li, lj] = max(Ms[bi, li, lj], wgt)
-            else:
-                far[(i, j)] = max(far.get((i, j), NEG), wgt)
-    far_arr = np.asarray([(i, j, w) for (i, j), w in far.items()],
-                         dtype=np.float64).reshape(-1, 3)
-    return Md, Ms, far_arr
+    def step(t, start):
+        js = jax.lax.dynamic_slice(preds_lv, (start, 0), (width, p))
+        ex = jax.lax.dynamic_slice(extra_lv, (start, 0), (width, p))
+        wv = jax.lax.dynamic_slice(work_lv, (start,), (width,))
+        bv = jax.lax.dynamic_slice(base_lv, (start,), (width,))
+        vals = jnp.where(js >= 0, t[jnp.maximum(js, 0)] + ex, NEG)
+        m = jnp.maximum(bv, vals.max(axis=1))
+        t = jax.lax.dynamic_update_slice(t, m + wv, (start,))
+        return t, ()
+
+    t0 = jnp.zeros((n + width,), dtype=jnp.float32)
+    t, _ = jax.lax.scan(step, t0, starts)
+    return t[rank]
+
+
+def longest_path_wavefront(aidg: AIDGLike,
+                           work: Optional[jnp.ndarray] = None,
+                           base: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Exact longest path in ``n_levels`` sequential device steps (vs ``n``
+    for ``longest_path_scan``) — identical results, the wavefront order is
+    just a parallel schedule of the same relaxation."""
+    ca = _as_compiled(aidg)
+    a = ca.aidg
+    s = ca.schedule
+    w = jnp.asarray(a.work if work is None else work, jnp.float32)
+    b = jnp.asarray(a.base if base is None else base, jnp.float32)
+    return _wavefront_impl(a.n, s.width, w, b, jnp.asarray(ca.preds_lv),
+                           jnp.asarray(ca.extra_lv), jnp.asarray(s.starts),
+                           jnp.asarray(s.order), jnp.asarray(s.rank))
+
+
+# ---------------------------------------------------------------------------
+# blocked max-plus closure evaluation (device-resident)
+# ---------------------------------------------------------------------------
 
 
 def maxplus_matmul_jnp(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
@@ -117,40 +171,143 @@ def maxplus_closure(M: jnp.ndarray, steps: int,
     return P
 
 
-def longest_path_blocked(aidg: AIDG, block: int = 128,
-                         matmul=maxplus_matmul_jnp) -> np.ndarray:
-    """Block-sequential evaluation: for each block b,
-    h_b = max(base+w, far-edge gathers, M_sub ⊗ t_{b-1}), t_b = M*_bb ⊗ h_b."""
-    n = aidg.n
-    nb = (n + block - 1) // block
-    Md, Ms, far = _block_matrices(aidg, block)
-    steps = int(np.ceil(np.log2(max(2, block))))
-    closures = jax.vmap(lambda M: maxplus_closure(M, steps, matmul))(
-        jnp.asarray(Md))
-    Ms_j = jnp.asarray(Ms)
+def _blocked_structure(ca: CompiledAIDG, block: int) -> Tuple[np.ndarray, ...]:
+    """Banded structure-only edge matrices, cached per block size on the
+    CompiledAIDG.
 
+    Returns (D_diag, D_sub, far_src, far_dst, far_w): per block b,
+    ``D_diag[b][i, j]`` is the extra delay of edge (local j -> local i)
+    inside the block (NEG if absent) *without* w_i (runtime work is folded
+    at eval so the blocked engine stays θ-reweightable), ``D_sub`` the same
+    for edges from the previous block, and the ``far_*`` arrays a padded
+    per-block gather list for edges reaching further back (pad: weight NEG,
+    dst ``block`` — a scratch slot)."""
+    hit = ca._block_cache.get(block)
+    if hit is not None:
+        return hit
+    a = ca.aidg
+    n = a.n
+    nb = max(1, (n + block - 1) // block)
+    Dd = np.full((nb, block, block), NEG, dtype=np.float32)
+    Ds = np.full((nb, block, block), NEG, dtype=np.float32)
+    far: Dict[int, list] = {b: [] for b in range(nb)}
+    for i in range(n):
+        bi, li = divmod(i, block)
+        for k in range(a.preds.shape[1]):
+            j = int(a.preds[i, k])
+            if j < 0:
+                break
+            d = float(a.pred_extra[i, k])
+            bj, lj = divmod(j, block)
+            if bj == bi:
+                Dd[bi, li, lj] = max(Dd[bi, li, lj], d)
+            elif bj == bi - 1:
+                Ds[bi, li, lj] = max(Ds[bi, li, lj], d)
+            else:
+                far[bi].append((j, li, d))
+    F = max(1, max(len(v) for v in far.values()))
+    far_src = np.zeros((nb, F), dtype=np.int32)
+    far_dst = np.full((nb, F), block, dtype=np.int32)
+    far_w = np.full((nb, F), NEG, dtype=np.float32)
+    for b, lst in far.items():
+        for k, (j, li, d) in enumerate(lst):
+            far_src[b, k] = j
+            far_dst[b, k] = li
+            far_w[b, k] = d
+    out = (Dd, Ds, far_src, far_dst, far_w)
+    ca._block_cache[block] = out
+    return out
+
+
+@partial(jax.jit, static_argnames=("n", "block", "matmul"))
+def _blocked_core(n: int, block: int, Dd: jnp.ndarray, Ds: jnp.ndarray,
+                  far_src: jnp.ndarray, far_dst: jnp.ndarray,
+                  far_w: jnp.ndarray, work: jnp.ndarray, base: jnp.ndarray,
+                  matmul: Callable = maxplus_matmul_jnp) -> jnp.ndarray:
+    """Device-resident block recurrence: for each block b,
+    h_b = max(base+w, far-edge gathers, M_sub ⊗ t_{b-1}), t_b = M*_bb ⊗ h_b,
+    the whole loop one ``lax.scan`` (carry: the global t vector)."""
+    nb = Dd.shape[0]
     pad = nb * block - n
-    base = np.pad(aidg.base.astype(np.float32), (0, pad), constant_values=NEG)
-    work = np.pad(aidg.work.astype(np.float32), (0, pad), constant_values=0.0)
-    h0 = (base + work).reshape(nb, block)
+    w_p = jnp.concatenate(
+        [work.astype(jnp.float32), jnp.zeros((pad,), jnp.float32)])
+    b_p = jnp.concatenate(
+        [base.astype(jnp.float32), jnp.full((pad,), NEG, jnp.float32)])
+    wb = w_p.reshape(nb, block)
+    h0 = (b_p + w_p).reshape(nb, block)
+    steps = int(np.ceil(np.log2(max(2, block))))
+    # absorb runtime work into edge weights: m_ij = d_ij + w_i (target row)
+    Md = Dd + wb[:, :, None]
+    Ms = Ds + wb[:, :, None]
+    closures = jax.vmap(lambda M: maxplus_closure(M, steps, matmul))(Md)
 
-    t = np.full(nb * block, NEG, dtype=np.float32)
-    mv = jax.jit(lambda M, v: jnp.max(M + v[None, :], axis=1))
-    for b in range(nb):
-        h = np.asarray(h0[b])
-        if b > 0:
-            prev = jnp.asarray(t[(b - 1) * block: b * block])
-            h = np.maximum(h, np.asarray(mv(Ms_j[b], prev)))
-        # far edges into this block (targets i in b, sources already final)
-        for i, j, wgt in far:
-            i = int(i)
-            if i // block == b:
-                li = i % block
-                h[li] = max(h[li], t[int(j)] + wgt)
-        tb = np.asarray(mv(closures[b], jnp.asarray(h)))
-        # closure includes the identity, so h itself is included
-        t[b * block: (b + 1) * block] = tb
-    return t[:n].astype(np.float64)
+    def step(t, inp):
+        bi, clo, Ms_b, w_b, fs, fd, fwgt, h_b = inp
+        start = jnp.maximum(bi - 1, 0) * block
+        prev = jax.lax.dynamic_slice(t, (start,), (block,))
+        # block 0 has an all-NEG Ms_b, so the (garbage) prev is masked out
+        h = jnp.maximum(h_b, matmul(Ms_b, prev[:, None])[:, 0])
+        w_pad = jnp.concatenate([w_b, jnp.zeros((1,), jnp.float32)])
+        contrib = t[fs] + fwgt + w_pad[fd]        # pad rows: + NEG, inert
+        h = jnp.concatenate([h, jnp.full((1,), NEG, jnp.float32)])
+        h = h.at[fd].max(contrib)[:block]
+        tb = matmul(clo, h[:, None])[:, 0]        # closure includes identity
+        t = jax.lax.dynamic_update_slice(t, tb, (bi * block,))
+        return t, ()
+
+    t0 = jnp.full((nb * block,), NEG, dtype=jnp.float32)
+    t, _ = jax.lax.scan(
+        step, t0, (jnp.arange(nb), closures, Ms, wb, far_src, far_dst, far_w,
+                   h0))
+    return t[:n]
+
+
+def longest_path_blocked(aidg: AIDGLike, block: int = 128,
+                         matmul: Callable = maxplus_matmul_jnp,
+                         work: Optional[jnp.ndarray] = None,
+                         base: Optional[jnp.ndarray] = None) -> np.ndarray:
+    """Fully device-resident blocked evaluation (one ``lax.scan`` over
+    blocks).  Pass ``matmul=repro.kernels.maxplus.maxplus_matmul_pallas`` to
+    run every max-plus ⊗ through the Pallas kernel."""
+    ca = _as_compiled(aidg)
+    a = ca.aidg
+    Dd, Ds, fs, fd, fw = _blocked_structure(ca, block)
+    w = jnp.asarray(a.work if work is None else work, jnp.float32)
+    b = jnp.asarray(a.base if base is None else base, jnp.float32)
+    t = _blocked_core(a.n, block, jnp.asarray(Dd), jnp.asarray(Ds),
+                      jnp.asarray(fs), jnp.asarray(fd), jnp.asarray(fw),
+                      w, b, matmul=matmul)
+    return np.asarray(t, dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
+# engine dispatch
+# ---------------------------------------------------------------------------
+
+
+def _relaxer(ca: CompiledAIDG, engine: str, block: int = 128
+             ) -> Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]:
+    """(work, base) -> t closure for the chosen engine, structure arrays
+    bound once (they are jit-constant across a sweep)."""
+    a = ca.aidg
+    if engine == "wavefront":
+        s = ca.schedule
+        pl, el = jnp.asarray(ca.preds_lv), jnp.asarray(ca.extra_lv)
+        st = jnp.asarray(s.starts)
+        od, rk = jnp.asarray(s.order), jnp.asarray(s.rank)
+        return lambda w, b: _wavefront_impl(a.n, s.width, w, b, pl, el, st,
+                                            od, rk)
+    if engine == "scan":
+        preds = jnp.asarray(a.preds)
+        extra = jnp.asarray(a.pred_extra)
+        return lambda w, b: _scan_impl(a.n, w, b, preds, extra)
+    if engine == "blocked":
+        Dd, Ds, fs, fd, fw = _blocked_structure(ca, block)
+        Dd, Ds = jnp.asarray(Dd), jnp.asarray(Ds)
+        fs, fd, fw = jnp.asarray(fs), jnp.asarray(fd), jnp.asarray(fw)
+        return lambda w, b: _blocked_core(a.n, block, Dd, Ds, fs, fd, fw,
+                                          w, b)
+    raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
 
 
 # ---------------------------------------------------------------------------
@@ -161,7 +318,17 @@ def longest_path_blocked(aidg: AIDG, block: int = 128,
 def slot_queue_scan(arrival: jnp.ndarray, lat: jnp.ndarray, slots: int
                     ) -> jnp.ndarray:
     """Service completion per access, arrival-ordered FIFO over ``slots``
-    request slots.  ``arrival``/``lat`` are in *arrival order*."""
+    request slots.  ``arrival``/``lat`` are in *arrival order*.
+
+    A single-slot queue is max-plus *linear*:
+    ``done_k = max(arrival_k, done_{k-1}) + lat_k`` unrolls to
+    ``done_k = S_k + max_{j<=k} (arrival_j - S_{j-1})`` with S the latency
+    prefix sum — one ``cumsum`` + one ``cummax`` instead of k sequential
+    scan steps.  Multi-slot queues keep the sorted-slot-vector scan (the
+    min over slot frees breaks max-plus linearity)."""
+    if slots == 1:
+        S = jnp.cumsum(lat)
+        return S + jax.lax.cummax(arrival - S + lat)
 
     def step(slot_free, inp):
         arr, l = inp
@@ -175,56 +342,65 @@ def slot_queue_scan(arrival: jnp.ndarray, lat: jnp.ndarray, slots: int
     return done
 
 
-def fixed_point_jax(aidg: AIDG, n_iters: int = 3,
+def fixed_point_jax(aidg: AIDGLike, n_iters: int = 3,
                     work: Optional[jnp.ndarray] = None,
                     base: Optional[jnp.ndarray] = None,
                     storage_lat: Optional[Dict[str, jnp.ndarray]] = None,
-                    ) -> jnp.ndarray:
+                    engine: str = DEFAULT_ENGINE) -> jnp.ndarray:
     """JAX version of ``builder.longest_path_fixed_point`` — jit/vmap-able
-    over (work, base, storage latencies) for design-space exploration."""
-    w = jnp.asarray(aidg.work if work is None else work, jnp.float32)
-    b0 = jnp.asarray(aidg.base if base is None else base, jnp.float32)
-    preds = jnp.asarray(aidg.preds)
-    extra = jnp.asarray(aidg.pred_extra)
-    fu_lat = jnp.asarray(aidg.fu_lat, jnp.float32)
-    n = aidg.n
+    over (work, base, storage latencies) for design-space exploration.
+    ``engine`` selects the DAG relaxation between queueing folds."""
+    ca = _as_compiled(aidg)
+    a = ca.aidg
+    w = jnp.asarray(a.work if work is None else work, jnp.float32)
+    b0 = jnp.asarray(a.base if base is None else base, jnp.float32)
+    fu_lat = jnp.asarray(a.fu_lat, jnp.float32)
+    relax = _relaxer(ca, engine)
 
-    t = _scan_impl(n, w, b0, preds, extra)
-    if not aidg.storage_nodes:
+    t = relax(w, b0)
+    if not a.storage_nodes:
         return t
     for _ in range(n_iters):
         b = b0
-        for st_name, nodes in aidg.storage_nodes.items():
+        for st_name in ca.storage_order:
             lats = jnp.asarray(
-                aidg.storage_lat[st_name] if storage_lat is None
+                a.storage_lat[st_name] if storage_lat is None
                 else storage_lat[st_name], jnp.float32)
-            nd = jnp.asarray(nodes)
-            slots = aidg.storage_slots[st_name]
-            arrival = t[nd] - w[nd]
+            nd = jnp.asarray(ca.storage_scatter[st_name])
+            slots = a.storage_slots[st_name]
+            # node-space gathers use the *constant* scatter indices; only
+            # the (θ-dependent) sort into service order and back needs
+            # batched-index gathers
+            w_nd = w[nd]
+            arrival = t[nd] - w_nd
             order = jnp.argsort(arrival)
-            done = slot_queue_scan(arrival[order], lats[order], slots)
-            need = done + fu_lat[nd[order]] - w[nd[order]]
-            b = b.at[nd[order]].max(need)
-        t = _scan_impl(n, w, b, preds, extra)
+            done_sorted = slot_queue_scan(arrival[order], lats[order], slots)
+            done = done_sorted[jnp.argsort(order)]    # back to access order
+            need = done + fu_lat[nd] - w_nd
+            b = b.at[nd].max(need)
+        t = relax(w, b)
     return t
 
 
-def fixed_point_batch(aidg: AIDG, works: Optional[jnp.ndarray] = None,
+def fixed_point_batch(aidg: AIDGLike, works: Optional[jnp.ndarray] = None,
                       bases: Optional[jnp.ndarray] = None,
                       storage_lats: Optional[Dict[str, jnp.ndarray]] = None,
-                      n_iters: int = 3) -> jnp.ndarray:
+                      n_iters: int = 3,
+                      engine: str = DEFAULT_ENGINE) -> jnp.ndarray:
     """Batched ``fixed_point_jax``: any of ``works`` (B, n), ``bases``
     (B, n), ``storage_lats`` {name: (B, k)} may carry a leading batch axis;
     omitted inputs broadcast from the AIDG baseline.  Returns (B, n)
     completion times in one vmapped device launch — the raw-latency-space
     counterpart of ``dse.sweep`` (which batches multiplicative θ factors).
     """
+    ca = _as_compiled(aidg)
+    a = ca.aidg
     batched = [x for x in (works, bases) if x is not None]
     if storage_lats is not None:
-        unknown = set(storage_lats) - set(aidg.storage_lat)
+        unknown = set(storage_lats) - set(a.storage_lat)
         if unknown:
             raise KeyError(f"unknown storage(s) {sorted(unknown)}; "
-                           f"AIDG has {sorted(aidg.storage_lat)}")
+                           f"AIDG has {sorted(a.storage_lat)}")
         batched.extend(storage_lats.values())
     if not batched:
         raise ValueError("fixed_point_batch needs at least one batched input")
@@ -233,18 +409,18 @@ def fixed_point_batch(aidg: AIDG, works: Optional[jnp.ndarray] = None,
         raise ValueError(f"batched inputs must be 2-D with one shared "
                          f"leading batch dim, got shapes {shapes}")
     B = batched[0].shape[0]
-    w = (jnp.broadcast_to(jnp.asarray(aidg.work, jnp.float32), (B, aidg.n))
+    w = (jnp.broadcast_to(jnp.asarray(a.work, jnp.float32), (B, a.n))
          if works is None else jnp.asarray(works, jnp.float32))
-    b = (jnp.broadcast_to(jnp.asarray(aidg.base, jnp.float32), (B, aidg.n))
+    b = (jnp.broadcast_to(jnp.asarray(a.base, jnp.float32), (B, a.n))
          if bases is None else jnp.asarray(bases, jnp.float32))
     sl = {name: (jnp.broadcast_to(jnp.asarray(lat, jnp.float32),
                                   (B, len(lat)))
                  if storage_lats is None or name not in storage_lats
                  else jnp.asarray(storage_lats[name], jnp.float32))
-          for name, lat in aidg.storage_lat.items()}
+          for name, lat in a.storage_lat.items()}
 
     def one(w_, b_, sl_):
-        return fixed_point_jax(aidg, n_iters=n_iters, work=w_, base=b_,
-                               storage_lat=sl_)
+        return fixed_point_jax(ca, n_iters=n_iters, work=w_, base=b_,
+                               storage_lat=sl_, engine=engine)
 
     return jax.vmap(one)(w, b, sl)

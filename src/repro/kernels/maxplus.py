@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["maxplus_matmul_kernel", "maxplus_matmul_pallas"]
+__all__ = ["maxplus_matmul_kernel", "maxplus_matmul_pallas",
+           "maxplus_matvec_pallas"]
 
 NEG = -1e18
 K_STEP = 8  # k-slab depth per VPU step inside a block
@@ -73,3 +74,11 @@ def maxplus_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, *,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
     )(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def maxplus_matvec_pallas(A: jnp.ndarray, v: jnp.ndarray, **kw) -> jnp.ndarray:
+    """(A ⊗ v)_i = max_k (A_ik + v_k) for (M, K) ⊗ (K,) — the per-block
+    propagation step of the AIDG blocked evaluator
+    (``repro.core.aidg.maxplus.longest_path_blocked``) routed through the
+    Pallas kernel as a single-column matmul."""
+    return maxplus_matmul_pallas(A, v[:, None], **kw)[:, 0]

@@ -9,7 +9,7 @@ from repro.core.acadl.sim import build_trace
 from repro.core.aidg import (build_aidg, estimate_cycles, fixed_point_jax,
                              longest_path, longest_path_blocked,
                              longest_path_fixed_point, longest_path_scan,
-                             make_problem, sweep)
+                             longest_path_wavefront, make_problem, sweep)
 from repro.core.archs import make_gamma_ag, make_oma_ag, make_systolic_ag
 from repro.core.mapping.gemm import (gamma_gemm, init_gemm_memory,
                                      oma_gemm_looped, oma_gemm_unrolled)
@@ -69,13 +69,16 @@ def test_jnp_paths_agree_with_numpy():
     trace = build_trace(ag, prog)
     aidg = build_aidg(ag, trace)
     t_np = longest_path(aidg)
+    t_wave = np.asarray(longest_path_wavefront(aidg))
     t_scan = np.asarray(longest_path_scan(aidg))
     t_blk = longest_path_blocked(aidg, block=64)
+    assert np.allclose(t_np, t_wave, atol=0.5)
     assert np.allclose(t_np, t_scan, atol=0.5)
     assert np.allclose(t_np, t_blk, atol=0.5)
     fp_np = longest_path_fixed_point(aidg)
-    fp_jx = np.asarray(fixed_point_jax(aidg))
-    assert abs(fp_np.max() - fp_jx.max()) < 1.0
+    for engine in ("wavefront", "scan", "blocked"):
+        fp_jx = np.asarray(fixed_point_jax(aidg, engine=engine))
+        assert abs(fp_np.max() - fp_jx.max()) < 1.0, engine
 
 
 def test_dse_theta_one_reproduces_baseline():

@@ -26,6 +26,16 @@ def test_maxplus_associativity(rng):
     np.testing.assert_allclose(left, right, atol=1e-4)
 
 
+def test_maxplus_matvec(rng):
+    """The single-column wrapper the blocked AIDG evaluator uses."""
+    from repro.kernels.maxplus import maxplus_matvec_pallas
+    A = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    out = maxplus_matvec_pallas(A, v)
+    want = jnp.max(A + v[None, :], axis=1)
+    np.testing.assert_allclose(out, want, atol=1e-5)
+
+
 @pytest.mark.parametrize("m,k,n,dt", [
     (128, 128, 128, jnp.float32),
     (64, 200, 96, jnp.bfloat16),
