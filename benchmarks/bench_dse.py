@@ -17,6 +17,12 @@ Sections:
 * ``aidg/depth-vs-n`` — per-scenario level-schedule statistics: node count
   vs critical depth, i.e. how much sequential work the compile pipeline
   (trace → AIDG → LevelSchedule → CompiledAIDG) removes.
+* ``dse/gradient`` — the gradient-based co-design loop: batched multi-start
+  projected Adam over the smooth max-plus relaxation
+  (``repro.core.aidg.gradient``) vs random search *and* coordinate descent
+  at their respective candidate budgets, on the latency·cost objective.
+  The small-budget run asserts the gradient incumbent beats random search
+  at an equal candidate budget.
 
 Budget: set ``BENCH_BUDGET=small`` for a CI-smoke run (few candidates, same
 code paths, loose throughput sanity asserted so evaluator regressions fail
@@ -145,7 +151,63 @@ def _bench_depth(rows: List[Dict]) -> None:
                              f"={deepest['levels']}lv")})
 
 
+def _bench_gradient(rows: List[Dict]) -> None:
+    from repro.core.aidg.explorer import Explorer, random_candidates
+    from repro.core.aidg.gradient import GradientExplorer
+
+    ex = Explorer()                    # AIDGs already cached
+    ge = GradientExplorer(ex)
+
+    kw = (dict(starts=2, steps=6, lr=0.3, tau0=0.3, tau_min=0.03) if SMALL
+          else {})                     # full defaults: starts=2, steps=22
+    # warm-up: one 1-step refine at the same start count traces the
+    # per-scenario grad kernels and the hard-finish evaluator, so the
+    # timed run below measures evaluation throughput, not trace time
+    # (matching how every other row in this file warms up first)
+    ge.refine(**{**kw, "steps": 1})
+    t0 = time.perf_counter()
+    res = ge.refine(**kw)
+    dt_grad = time.perf_counter() - t0
+    grad_score = res.score
+    budget = res.evaluations
+
+    # random search at the SAME candidate budget (row 0 is θ = 1, so the
+    # baseline machine is always among the candidates)
+    cand = random_candidates(ex.space, budget, seed=0)
+    r = ex.explore(cand)
+    rand_score = float((r.latency * r.cost).min())
+
+    # coordinate descent at ITS default budget ((points+1) x knobs x rounds)
+    if SMALL:
+        cd_rounds, cd_points = 1, 3
+    else:
+        cd_rounds, cd_points = 2, 9
+    t0 = time.perf_counter()
+    cd_theta = ex.refine(rounds=cd_rounds, points=cd_points)
+    dt_cd = time.perf_counter() - t0
+    rr = ex.explore(cd_theta[None, :])
+    cd_score = float(rr.latency[0] * rr.cost[0])
+    cd_budget = (cd_points + 1) * ex.space.n * cd_rounds
+
+    rows.append({"name": "dse/gradient",
+                 "us_per_call": dt_grad / budget * 1e6,
+                 "derived": (f"evals={budget};score={grad_score:.4f};"
+                             f"random_score_same_budget={rand_score:.4f};"
+                             f"coord_score={cd_score:.4f}"
+                             f"(evals={cd_budget},{dt_cd:.1f}s);"
+                             f"starts={len(res.final_scores)};"
+                             f"steps={len(res.history)};"
+                             f"tau={res.history[0]['tau']:.2f}->"
+                             f"{res.history[-1]['tau']:.2f}")})
+    if SMALL and grad_score >= rand_score:
+        raise AssertionError(
+            f"gradient refine regressed: score {grad_score:.4f} at "
+            f"{budget} evals does not beat random search "
+            f"({rand_score:.4f} at the same budget)")
+
+
 def run(rows: List[Dict]) -> None:
     _bench_single(rows)
     _bench_matrix(rows)
     _bench_depth(rows)
+    _bench_gradient(rows)

@@ -7,7 +7,11 @@ on-chip SRAM, DRAM — multiplicative latency factors) over the FULL scenario
 matrix: 6 modeled architectures x their mapped workloads (GEMM, conv,
 attention, selective-scan, map-reduce), >= 1000 candidates per batch, one
 batched JAX sweep per cached AIDG.  Reports the Pareto frontier of
-(latency, cost/area proxy) and a coordinate-descent refinement.
+(latency, cost/area proxy) and two refinements of the incumbent: classic
+derivative-free coordinate descent, and gradient descent through the
+smooth max-plus relaxation (the sweep is pure JAX, so the makespan is
+differentiable in the design knobs — batched multi-start projected Adam
+needs half the candidate evaluations).
 
     PYTHONPATH=src python examples/accelerator_dse.py
 """
@@ -18,6 +22,7 @@ import numpy as np
 
 from repro.core.aidg.explorer import (Explorer, grid_candidates,
                                       random_candidates)
+from repro.core.aidg.gradient import GradientExplorer
 
 
 def main():
@@ -71,10 +76,27 @@ def main():
     t0 = time.perf_counter()
     best = ex.refine(rounds=2, points=7)
     ref = ex.explore(best[None, :])
-    print(f"\ncoordinate descent ({time.perf_counter() - t0:.2f}s) -> "
-          f"latency {ref.latency[0]:.3f}, cost {ref.cost[0]:.2f}")
+    cd_evals = (7 + 1) * ex.space.n * 2
+    print(f"\ncoordinate descent ({time.perf_counter() - t0:.2f}s, "
+          f"{cd_evals} candidates) -> latency {ref.latency[0]:.3f}, "
+          f"cost {ref.cost[0]:.2f}, "
+          f"product {ref.latency[0] * ref.cost[0]:.3f}")
     print("  theta:", {n: round(float(v), 3)
                        for n, v in zip(ex.space.names, best)})
+
+    # --- gradient refinement over the smooth max-plus relaxation ----------
+    # batched multi-start projected Adam in log-knob space, τ annealed from
+    # a heavily smoothed landscape to a near-exact one; the final score is
+    # re-judged by the hard evaluator (same objective as everything above)
+    t0 = time.perf_counter()
+    res = GradientExplorer(ex).refine()
+    gref = ex.explore(res.theta[None, :])
+    print(f"gradient descent ({time.perf_counter() - t0:.2f}s, "
+          f"{res.evaluations} candidates) -> "
+          f"latency {gref.latency[0]:.3f}, cost {gref.cost[0]:.2f}, "
+          f"product {res.score:.3f}")
+    print("  theta:", {n: round(float(v), 3)
+                       for n, v in zip(ex.space.names, res.theta)})
 
 
 if __name__ == "__main__":

@@ -18,15 +18,21 @@ from .maxplus import (
     ENGINES,
     fixed_point_batch,
     fixed_point_jax,
+    fixed_point_soft,
     longest_path_blocked,
     longest_path_scan,
+    longest_path_soft,
     longest_path_wavefront,
     maxplus_closure,
     maxplus_matmul_jnp,
     slot_queue_scan,
+    slot_queue_soft,
+    softmax_reduce,
+    softmaximum,
 )
-from .dse import (DSEProblem, compiled_sweep, evaluate_theta, make_problem,
-                  sweep)
+from .dse import (DSEProblem, compiled_sweep, evaluate_theta,
+                  evaluate_theta_soft, grad_sweep, make_problem, sweep)
+from .gradient import GradientExplorer, GradientResult
 from .explorer import (
     DEFAULT_SPACE,
     CompiledScenario,
@@ -49,9 +55,12 @@ __all__ = [
     "longest_path_fixed_point",
     "ENGINES", "DEFAULT_ENGINE",
     "longest_path_wavefront", "longest_path_scan", "longest_path_blocked",
-    "fixed_point_jax", "fixed_point_batch",
-    "maxplus_closure", "maxplus_matmul_jnp", "slot_queue_scan",
-    "DSEProblem", "make_problem", "evaluate_theta", "compiled_sweep", "sweep",
+    "longest_path_soft", "fixed_point_jax", "fixed_point_batch",
+    "fixed_point_soft", "maxplus_closure", "maxplus_matmul_jnp",
+    "slot_queue_scan", "slot_queue_soft", "softmaximum", "softmax_reduce",
+    "DSEProblem", "make_problem", "evaluate_theta", "evaluate_theta_soft",
+    "grad_sweep", "compiled_sweep", "sweep",
+    "GradientExplorer", "GradientResult",
     "Scenario", "CompiledScenario", "default_scenarios", "compile_scenario",
     "clear_scenario_cache", "Knob", "DesignSpace", "DEFAULT_SPACE",
     "grid_candidates", "random_candidates", "pareto_front",

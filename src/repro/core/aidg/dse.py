@@ -13,6 +13,16 @@ so θ = 1 reproduces the modeled accelerator exactly, θ_op[gemm@mxu#] = 0.5
 models a 2× faster matrix unit, θ_st[hbm#] = 2 a half-bandwidth memory, etc.
 ``sweep`` evaluates thousands of candidate accelerators in one batched JAX
 call via ``vmap`` over θ — the trace and graph are never rebuilt.
+
+Because the whole evaluator is JAX end-to-end, the makespan is also
+*differentiable in θ*: ``evaluate_theta_soft`` swaps the hard max-plus
+engine for the temperature-τ smooth family (``maxplus.fixed_point_soft``)
+and ``grad_sweep`` returns a cached ``jit(vmap(value_and_grad))`` that maps
+a batch of *shared knob vectors* straight to (soft cycles, d cycles / d
+knob) — the chain through ``DesignSpace.projection`` is part of the traced
+function, so gradients land on the few shared knobs rather than the
+per-scenario θ columns.  ``repro.core.aidg.gradient`` turns this into a
+projected-Adam design-space optimizer.
 """
 
 from __future__ import annotations
@@ -25,10 +35,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from .builder import AIDG, CompiledAIDG, compile_aidg, longest_path_fixed_point
-from .maxplus import DEFAULT_ENGINE, fixed_point_jax
+from .maxplus import (DEFAULT_ENGINE, fixed_point_jax, fixed_point_soft,
+                      softmax_reduce, softmaximum)
 
 __all__ = ["DSEProblem", "make_problem", "evaluate_theta", "compiled_sweep",
-           "sweep"]
+           "sweep", "evaluate_theta_soft", "grad_sweep"]
 
 
 @dataclass
@@ -42,11 +53,11 @@ class DSEProblem:
     # build-time compilation artifact (level schedule + padded gathers),
     # shared by every sweep over this problem
     caidg: Optional[CompiledAIDG] = None
-    # (n_iters, engine) -> jitted vmapped evaluator (jax.jit caches by
-    # function identity, so re-creating the lambda per sweep() would
-    # re-trace)
-    _compiled: Dict[Tuple[int, str], Callable] = field(default_factory=dict,
-                                                       repr=False)
+    # (n_iters, engine) -> jitted vmapped evaluator, and
+    # ("grad", n_iters, projection bytes) -> jitted vmapped value_and_grad
+    # (jax.jit caches by function identity, so re-creating the lambda per
+    # sweep() would re-trace)
+    _compiled: Dict[Tuple, Callable] = field(default_factory=dict, repr=False)
 
     @property
     def n_op(self) -> int:
@@ -74,8 +85,13 @@ def make_problem(aidg: AIDG) -> DSEProblem:
                       caidg=compile_aidg(aidg))
 
 
-def _reweight(prob: DSEProblem, theta_op: jnp.ndarray, theta_st: jnp.ndarray
+def _reweight(prob: DSEProblem, theta_op: jnp.ndarray, theta_st: jnp.ndarray,
+              floor: Callable = jnp.maximum
               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray], jnp.ndarray]:
+    """θ -> (per-node work, scaled storage latencies, scaled fu latencies).
+    ``floor`` applies the 1-cycle occupancy minimum — ``jnp.maximum`` on
+    the hard path, a τ-``softmaximum`` on the smooth one (one shared
+    re-weighting, so hard and soft evaluators can't drift apart)."""
     aidg = prob.aidg
     fu = jnp.asarray(aidg.fu_lat) * theta_op[prob.node_op]
     mem_scale = jnp.ones(aidg.n, dtype=jnp.float32)
@@ -85,7 +101,7 @@ def _reweight(prob: DSEProblem, theta_op: jnp.ndarray, theta_st: jnp.ndarray
         st_lat[st] = jnp.asarray(aidg.storage_lat[st]) * theta_st[cid]
         mem_scale = mem_scale.at[jnp.asarray(nodes)].set(theta_st[cid])
     mem = jnp.asarray(aidg.mem_lat) * mem_scale
-    work = jnp.maximum(1.0, fu + mem)
+    work = floor(jnp.float32(1.0), fu + mem)
     return work, st_lat, fu
 
 
@@ -162,3 +178,53 @@ def sweep(prob: DSEProblem, thetas_op: np.ndarray, thetas_st: np.ndarray,
         else:
             out[s:e] = np.asarray(fn(to[s:e], ts[s:e]))
     return out
+
+
+# ---------------------------------------------------------------------------
+# smooth evaluation + knob-space gradients (the co-design inner loop)
+# ---------------------------------------------------------------------------
+
+
+def evaluate_theta_soft(prob: DSEProblem, theta_op: jnp.ndarray,
+                        theta_st: jnp.ndarray, tau, n_iters: int = 2
+                        ) -> jnp.ndarray:
+    """Smooth estimated cycles for one parameter point: the τ-tempered
+    counterpart of ``evaluate_theta`` (soft occupancy floor, soft wavefront
+    fixed point, soft makespan reduction).  Upper-bounds the hard estimate
+    and converges to it as τ → 0; smooth in (θ_op, θ_st) everywhere — the
+    hard ``max(1, fu + mem)`` floor would have zero gradient wherever θ has
+    pushed a node under it, killing descent directions exactly where fast
+    hardware stops paying, so the floor is softened too."""
+    work, st_lat, _ = _reweight(prob, theta_op, theta_st,
+                                floor=lambda a, b: softmaximum(a, b, tau))
+    t = fixed_point_soft(prob.compiled_aidg, tau=tau, n_iters=n_iters,
+                         work=work, storage_lat=st_lat)
+    return softmax_reduce(t, tau)
+
+
+def grad_sweep(prob: DSEProblem, op_idx: np.ndarray, st_idx: np.ndarray,
+               n_iters: int = 2) -> Callable:
+    """Cached ``jit(vmap(value_and_grad))`` from *shared knob space*:
+    ``fn(knobs (B, K), tau) -> (soft cycles (B,), d cycles/d knob (B, K))``.
+
+    ``op_idx`` / ``st_idx`` are ``DesignSpace.projection(prob)`` gather maps
+    (op-class/storage -> knob, with K = identity column); baking them into
+    the traced function chains the projection inside autodiff, so the
+    returned gradient is already in the K shared knobs — no per-scenario θ
+    chain rule on the host.  τ is traced: annealing re-uses the kernel."""
+    op_idx = np.asarray(op_idx, np.int64)
+    st_idx = np.asarray(st_idx, np.int64)
+    key = ("grad", n_iters, op_idx.tobytes(), st_idx.tobytes())
+    fn = prob._compiled.get(key)
+    if fn is None:
+        oi, si = jnp.asarray(op_idx), jnp.asarray(st_idx)
+
+        def f(knobs, tau):
+            padded = jnp.concatenate(
+                [knobs, jnp.ones((1,), knobs.dtype)])   # identity column
+            return evaluate_theta_soft(prob, padded[oi], padded[si], tau,
+                                       n_iters=n_iters)
+
+        fn = jax.jit(jax.vmap(jax.value_and_grad(f), in_axes=(0, None)))
+        prob._compiled[key] = fn
+    return fn

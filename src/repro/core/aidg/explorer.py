@@ -48,6 +48,7 @@ Worked example (numbers in ``docs/dse.md``, measured by
 from __future__ import annotations
 
 import re
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -377,16 +378,31 @@ def grid_candidates(space: DesignSpace, points: int = 4) -> np.ndarray:
 def pareto_front(objectives: np.ndarray) -> np.ndarray:
     """Indices of the non-dominated rows of a (B, 2) minimization problem,
     sorted by the first objective.  Deterministic: ties broken by original
-    row order (stable lexsort); exact duplicates keep the first row only."""
+    row order (stable lexsort); exact duplicates keep the first row only.
+
+    Rows with NaN/inf objectives are ignored with a warning: NaN breaks the
+    lexsort's ordering contract and an inf-latency row could otherwise be
+    "non-dominated" purely by having the smallest cost — a diverged sweep
+    (θ outside the evaluator's stable range) must not corrupt the frontier.
+    """
     objs = np.asarray(objectives, np.float64)
     assert objs.ndim == 2 and objs.shape[1] == 2
-    order = np.lexsort((objs[:, 1], objs[:, 0]))
+    finite = np.isfinite(objs).all(axis=1)
+    if not finite.all():
+        warnings.warn(
+            f"pareto_front: ignoring {int((~finite).sum())} candidate(s) "
+            f"with non-finite objectives", RuntimeWarning, stacklevel=2)
+        if not finite.any():
+            return np.zeros(0, dtype=np.int64)
+    rows = np.nonzero(finite)[0]
+    sub = objs[rows]
+    order = np.lexsort((sub[:, 1], sub[:, 0]))
     keep: List[int] = []
     best1 = np.inf
     for i in order:
-        if objs[i, 1] < best1:
-            keep.append(int(i))
-            best1 = objs[i, 1]
+        if sub[i, 1] < best1:
+            keep.append(int(rows[i]))
+            best1 = sub[i, 1]
     return np.asarray(keep, dtype=np.int64)
 
 
@@ -539,17 +555,50 @@ class Explorer:
         return ExplorationResult(self.space, self.scenario_names, kt, cycles,
                                  latency, cost, front)
 
-    # -- coordinate-descent refinement -------------------------------------
+    # -- refinement: coordinate descent or gradient descent -----------------
 
-    def refine(self, start: Optional[np.ndarray] = None, rounds: int = 2,
-               points: int = 9, objective: str = "product") -> np.ndarray:
-        """Deterministic coordinate descent: sweep one knob at a time over
-        ``points`` log-spaced levels (others fixed), keep the argmin, and
-        cycle ``rounds`` times.  ``objective``: 'product' minimizes
-        latency * cost; 'latency' ignores cost (pure speed)."""
+    def refine(self, start: Optional[np.ndarray] = None,
+               rounds: Optional[int] = None, points: Optional[int] = None,
+               objective: str = "product", method: str = "coord",
+               **grad_kwargs) -> np.ndarray:
+        """Refine the incumbent design.
+
+        ``method="coord"`` (default): deterministic coordinate descent —
+        sweep one knob at a time over ``points`` (default 9) log-spaced
+        levels (others fixed), keep the argmin, cycle ``rounds`` (default
+        2) times; evaluates ``(points + 1) x n_knobs x rounds`` candidates.
+
+        ``method="grad"``: batched multi-start projected Adam over the
+        smooth max-plus relaxation (``repro.core.aidg.gradient``) —
+        a handful of gradient steps per start instead of per-knob sweeps;
+        ``grad_kwargs`` (``starts``, ``steps``, ``lr``, ``tau0``,
+        ``tau_min``, ``seed``) pass through to ``GradientExplorer.refine``.
+
+        Arguments that belong to the *other* method are rejected, not
+        silently ignored (``rounds``/``points`` are coordinate-descent
+        knobs; the gradient budget is ``starts``/``steps``).
+
+        ``objective``: 'product' minimizes latency * cost; 'latency'
+        ignores cost (pure speed)."""
         if objective not in ("product", "latency"):
             raise ValueError(f"objective must be 'product' or 'latency', "
                              f"got {objective!r}")
+        if method == "grad":
+            if rounds is not None or points is not None:
+                raise TypeError(
+                    "rounds/points configure coordinate descent; for "
+                    "method='grad' size the search with starts/steps")
+            from .gradient import GradientExplorer
+            ge = GradientExplorer(self, objective=objective)
+            return ge.refine(start=start, **grad_kwargs).theta
+        if method != "coord":
+            raise ValueError(f"method must be 'coord' or 'grad', "
+                             f"got {method!r}")
+        if grad_kwargs:
+            raise TypeError(f"unexpected arguments for method='coord': "
+                            f"{sorted(grad_kwargs)}")
+        rounds = 2 if rounds is None else rounds
+        points = 9 if points is None else points
         cur = (np.ones(self.space.n, np.float32) if start is None
                else self.space.clip(start).copy())
         for _ in range(rounds):

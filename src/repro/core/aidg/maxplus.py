@@ -26,6 +26,21 @@ vmaps the whole fixed point.
 The storage request-slot queueing (arrival-ordered service, Figs. 12/13) is
 ``slot_queue_scan``: per storage, accesses sorted by arrival relax against a
 sorted slot vector via ``lax.scan`` — also vmappable over parameters.
+
+**The smooth relaxation family** (gradient-based co-design, §1/§7): every
+hard ``max`` above is piecewise-linear in the latency parameters, so
+``jax.grad`` returns a subgradient that is blind across kinks and dead on
+plateaus.  ``longest_path_soft`` / ``slot_queue_soft`` / ``fixed_point_soft``
+replace each ``max`` with the temperature-τ log-sum-exp
+
+    softmax_τ(x₁, …, x_K) = τ · log Σ_k exp(x_k / τ)
+                          ∈ [max_k x_k,  max_k x_k + τ·log K]
+
+which is smooth everywhere, monotone in every argument, and recovers the
+exact wavefront result as τ → 0 (the overestimate is at most τ·log K per
+reduction, K = in-degree + 1).  τ is a *traced* scalar, so annealing it
+inside an optimization loop never re-traces the compiled evaluator —
+``repro.core.aidg.gradient`` builds projected Adam on top of this.
 """
 
 from __future__ import annotations
@@ -50,6 +65,11 @@ __all__ = [
     "fixed_point_batch",
     "maxplus_matmul_jnp",
     "maxplus_closure",
+    "softmaximum",
+    "softmax_reduce",
+    "longest_path_soft",
+    "slot_queue_soft",
+    "fixed_point_soft",
 ]
 
 NEG = -1e18
@@ -342,6 +362,173 @@ def slot_queue_scan(arrival: jnp.ndarray, lat: jnp.ndarray, slots: int
     return done
 
 
+# ---------------------------------------------------------------------------
+# smooth max-plus relaxation (temperature-τ log-sum-exp family)
+# ---------------------------------------------------------------------------
+
+
+def softmaximum(a: jnp.ndarray, b: jnp.ndarray, tau) -> jnp.ndarray:
+    """Smooth two-argument max: τ·logaddexp(a/τ, b/τ) ≥ max(a, b), exact as
+    τ → 0.  Shift-stable (logaddexp subtracts the pairwise max internally),
+    monotone in both arguments, and smooth everywhere — the gradient splits
+    between a and b by their softmax weights instead of picking a winner."""
+    return tau * jnp.logaddexp(a / tau, b / tau)
+
+
+def softmax_reduce(x: jnp.ndarray, tau, axis: int = -1) -> jnp.ndarray:
+    """Smooth max-reduction: τ·logsumexp(x/τ) over ``axis``.  Entries at the
+    ``NEG`` sentinel contribute softmax weight exp(NEG/τ - max/τ) = 0, so
+    padded predecessor slots stay inert exactly as under the hard max."""
+    return tau * jax.nn.logsumexp(x / tau, axis=axis)
+
+
+@partial(jax.jit, static_argnames=("n", "width"))
+def _wavefront_soft_impl(n: int, width: int, tau: jnp.ndarray,
+                         work: jnp.ndarray, base: jnp.ndarray,
+                         preds_lv: jnp.ndarray, extra_lv: jnp.ndarray,
+                         starts: jnp.ndarray, order: jnp.ndarray,
+                         rank: jnp.ndarray) -> jnp.ndarray:
+    """``_wavefront_impl`` with the per-node hard max over (base, preds)
+    replaced by ``softmax_reduce``.  τ is traced, not static: annealing it
+    re-uses the compiled kernel."""
+    work_lv = jnp.concatenate(
+        [work.astype(jnp.float32)[order], jnp.zeros((width,), jnp.float32)])
+    base_lv = jnp.concatenate(
+        [base.astype(jnp.float32)[order], jnp.full((width,), NEG, jnp.float32)])
+    p = preds_lv.shape[1]
+
+    def step(t, start):
+        js = jax.lax.dynamic_slice(preds_lv, (start, 0), (width, p))
+        ex = jax.lax.dynamic_slice(extra_lv, (start, 0), (width, p))
+        wv = jax.lax.dynamic_slice(work_lv, (start,), (width,))
+        bv = jax.lax.dynamic_slice(base_lv, (start,), (width,))
+        vals = jnp.where(js >= 0, t[jnp.maximum(js, 0)] + ex, NEG)
+        m = softmax_reduce(jnp.concatenate([bv[:, None], vals], axis=1), tau,
+                           axis=1)
+        t = jax.lax.dynamic_update_slice(t, m + wv, (start,))
+        return t, ()
+
+    t0 = jnp.zeros((n + width,), dtype=jnp.float32)
+    t, _ = jax.lax.scan(step, t0, starts)
+    return t[rank]
+
+
+def longest_path_soft(aidg: AIDGLike, tau: float = 0.05,
+                      work: Optional[jnp.ndarray] = None,
+                      base: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Smooth wavefront relaxation: upper-bounds ``longest_path_wavefront``
+    node-wise, with per-node slack at most depth·τ·log(in-degree + 1), so
+    the τ → 0 limit is the exact longest path.  Differentiable in (work,
+    base) everywhere, including across critical-path switches."""
+    ca = _as_compiled(aidg)
+    a = ca.aidg
+    s = ca.schedule
+    w = jnp.asarray(a.work if work is None else work, jnp.float32)
+    b = jnp.asarray(a.base if base is None else base, jnp.float32)
+    return _wavefront_soft_impl(a.n, s.width, jnp.asarray(tau, jnp.float32),
+                                w, b, jnp.asarray(ca.preds_lv),
+                                jnp.asarray(ca.extra_lv),
+                                jnp.asarray(s.starts), jnp.asarray(s.order),
+                                jnp.asarray(s.rank))
+
+
+def slot_queue_soft(arrival: jnp.ndarray, lat: jnp.ndarray, slots: int,
+                    tau) -> jnp.ndarray:
+    """``slot_queue_scan`` with every hard max softened.
+
+    The single-slot closed form stays closed-form: the unrolled recurrence
+    ``done_k = S_k + max_{j<=k}(arrival_j - S_{j-1})`` becomes
+    ``S_k + τ·cumlogsumexp((arrival - S + lat)/τ)`` — the running soft-max
+    via one associative scan (pairwise shift-stable), matching the hard
+    cumsum + cummax path as τ → 0.  Multi-slot queues keep the sorted
+    slot-vector scan with a ``softmaximum`` service-begin; the sort itself
+    is piecewise-constant in the parameters and needs no smoothing."""
+    if slots == 1:
+        S = jnp.cumsum(lat)
+        return S + tau * jax.lax.cumlogsumexp((arrival - S + lat) / tau)
+
+    def step(slot_free, inp):
+        arr, l = inp
+        begin = softmaximum(arr, slot_free[0], tau)
+        done = begin + l
+        slot_free = jnp.sort(slot_free.at[0].set(done))
+        return slot_free, done
+
+    init = jnp.zeros((slots,), dtype=jnp.float32)
+    _, done = jax.lax.scan(step, init, (arrival, lat))
+    return done
+
+
+def fixed_point_soft(aidg: AIDGLike, tau: float = 0.05, n_iters: int = 3,
+                     work: Optional[jnp.ndarray] = None,
+                     base: Optional[jnp.ndarray] = None,
+                     storage_lat: Optional[Dict[str, jnp.ndarray]] = None
+                     ) -> jnp.ndarray:
+    """``fixed_point_jax`` over the smooth family: soft wavefront
+    relaxations between queueing folds, ``slot_queue_soft`` inside them, and
+    a ``softmaximum`` base fold-back.  The arrival-order ``argsort`` is
+    piecewise-constant in θ (its subgradient contribution is zero almost
+    everywhere), so treating it as a constant gather keeps the whole fixed
+    point ``jax.grad``-safe."""
+    ca = _as_compiled(aidg)
+    a = ca.aidg
+    tau = jnp.asarray(tau, jnp.float32)
+    w = jnp.asarray(a.work if work is None else work, jnp.float32)
+    b0 = jnp.asarray(a.base if base is None else base, jnp.float32)
+    s = ca.schedule
+    pl, el = jnp.asarray(ca.preds_lv), jnp.asarray(ca.extra_lv)
+    st_, od, rk = (jnp.asarray(s.starts), jnp.asarray(s.order),
+                   jnp.asarray(s.rank))
+    relax = lambda w_, b_: _wavefront_soft_impl(a.n, s.width, tau, w_, b_,
+                                                pl, el, st_, od, rk)
+    queue = lambda arr, lat, slots: slot_queue_soft(arr, lat, slots, tau)
+
+    def fold(b, nd, need):
+        # scatter the access needs into node space (duplicates keep the
+        # hard max — a zero-measure kink), then soft-fold into the base:
+        # softmaximum(b, NEG) == b exactly, so untouched nodes are inert
+        need_full = jnp.full_like(b, NEG).at[nd].max(need)
+        return softmaximum(b, need_full, tau)
+
+    return _fixed_point_core(ca, relax, queue, fold, w, b0, storage_lat,
+                             n_iters)
+
+
+def _fixed_point_core(ca: CompiledAIDG, relax: Callable, queue: Callable,
+                      fold: Callable, w: jnp.ndarray, b0: jnp.ndarray,
+                      storage_lat: Optional[Dict[str, jnp.ndarray]],
+                      n_iters: int) -> jnp.ndarray:
+    """The one queueing fixed point shared by the hard and soft evaluators
+    (so the gradient always descends the same objective the hard path
+    scores): relax the DAG, replay each storage's accesses in estimated-
+    arrival order through ``queue``, ``fold`` the service needs back into
+    the bases, iterate.  Node-space gathers use the *constant* scatter
+    indices; only the (θ-dependent) sort into service order and back needs
+    batched-index gathers."""
+    a = ca.aidg
+    fu_lat = jnp.asarray(a.fu_lat, jnp.float32)
+    t = relax(w, b0)
+    if not a.storage_nodes:
+        return t
+    for _ in range(n_iters):
+        b = b0
+        for st_name in ca.storage_order:
+            lats = jnp.asarray(
+                a.storage_lat[st_name] if storage_lat is None
+                else storage_lat[st_name], jnp.float32)
+            nd = jnp.asarray(ca.storage_scatter[st_name])
+            slots = a.storage_slots[st_name]
+            w_nd = w[nd]
+            arrival = t[nd] - w_nd
+            order = jnp.argsort(arrival)
+            done_sorted = queue(arrival[order], lats[order], slots)
+            done = done_sorted[jnp.argsort(order)]    # back to access order
+            need = done + fu_lat[nd] - w_nd
+            b = fold(b, nd, need)
+        t = relax(w, b)
+    return t
+
+
 def fixed_point_jax(aidg: AIDGLike, n_iters: int = 3,
                     work: Optional[jnp.ndarray] = None,
                     base: Optional[jnp.ndarray] = None,
@@ -354,32 +541,9 @@ def fixed_point_jax(aidg: AIDGLike, n_iters: int = 3,
     a = ca.aidg
     w = jnp.asarray(a.work if work is None else work, jnp.float32)
     b0 = jnp.asarray(a.base if base is None else base, jnp.float32)
-    fu_lat = jnp.asarray(a.fu_lat, jnp.float32)
-    relax = _relaxer(ca, engine)
-
-    t = relax(w, b0)
-    if not a.storage_nodes:
-        return t
-    for _ in range(n_iters):
-        b = b0
-        for st_name in ca.storage_order:
-            lats = jnp.asarray(
-                a.storage_lat[st_name] if storage_lat is None
-                else storage_lat[st_name], jnp.float32)
-            nd = jnp.asarray(ca.storage_scatter[st_name])
-            slots = a.storage_slots[st_name]
-            # node-space gathers use the *constant* scatter indices; only
-            # the (θ-dependent) sort into service order and back needs
-            # batched-index gathers
-            w_nd = w[nd]
-            arrival = t[nd] - w_nd
-            order = jnp.argsort(arrival)
-            done_sorted = slot_queue_scan(arrival[order], lats[order], slots)
-            done = done_sorted[jnp.argsort(order)]    # back to access order
-            need = done + fu_lat[nd] - w_nd
-            b = b.at[nd].max(need)
-        t = relax(w, b)
-    return t
+    return _fixed_point_core(
+        ca, _relaxer(ca, engine), slot_queue_scan,
+        lambda b, nd, need: b.at[nd].max(need), w, b0, storage_lat, n_iters)
 
 
 def fixed_point_batch(aidg: AIDGLike, works: Optional[jnp.ndarray] = None,

@@ -55,13 +55,13 @@ def adamw_update(cfg: AdamWConfig, params, grads, state
         delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
         return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
 
-    flat_p, treedef = jax.tree_util.tree_flatten(params)
-    flat_g = treedef.flatten_up_to(grads)
-    flat_m = treedef.flatten_up_to(state["m"])
-    flat_v = treedef.flatten_up_to(state["v"])
-    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
-    new_p = treedef.unflatten([o[0] for o in out])
-    new_m = treedef.unflatten([o[1] for o in out])
-    new_v = treedef.unflatten([o[2] for o in out])
+    # tree-generic: params may be any pytree — a full model, or a bare
+    # array (the DSE gradient explorer optimizes a single (starts, knobs)
+    # leaf).  tree.map also validates that grads/m/v mirror params, which
+    # the old flatten_up_to dance did not.
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    outer = jax.tree.structure(params)
+    new_p, new_m, new_v = jax.tree.transpose(
+        outer, jax.tree.structure((0, 0, 0)), out)
     metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
     return new_p, {"step": step, "m": new_m, "v": new_v}, metrics

@@ -19,6 +19,24 @@ from repro.core.aidg.explorer import (DEFAULT_SPACE, Explorer,
 SCENARIOS = default_scenarios()
 IDS = [s.name for s in SCENARIOS]
 
+# Golden θ = 1 wavefront cycles per default cell, pinned as literals so an
+# evaluator refactor cannot silently drift the baseline while staying inside
+# each cell's sim_tol band.  Update ONLY when a change is *supposed* to move
+# the estimate — and re-justify it against the event simulator (the second
+# member of test_theta_one_golden_regression re-checks golden vs oracle).
+GOLDEN_THETA1_CYCLES = {
+    "oma/gemm": 3832.0,
+    "systolic/gemm": 1187.0,
+    "gamma/gemm": 2954.0,
+    "gamma/attention": 980.0,
+    "gamma/scan": 2753.0,
+    "eyeriss/conv": 91.0,
+    "plasticine/reduce": 91.0,
+    "tpu_v5e/gemm": 3881.0,
+    "tpu_v5e/attention": 225.0,
+    "tpu_v5e/scan": 613.0,
+}
+
 
 @pytest.fixture(scope="module")
 def explorer():
@@ -40,6 +58,26 @@ def test_sweep_theta_one_matches_event_sim(scenario, explorer):
         assert round(est) == sim, (cs.name, est, sim)
     else:
         assert abs(est - sim) / sim <= scenario.sim_tol, (cs.name, est, sim)
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS, ids=IDS)
+def test_theta_one_golden_regression(scenario, explorer):
+    """Golden regression: the wavefront θ = 1 estimate is pinned to a
+    literal per cell.  The sim-agreement test above has a tolerance band on
+    inexact cells, so an evaluator refactor could drift inside it unnoticed
+    — this pin turns any drift into a loud, reviewed diff.  The golden
+    value itself must stay within the cell's sim_tol of the oracle, so the
+    pin can't ossify a wrong number either."""
+    assert scenario.name in GOLDEN_THETA1_CYCLES, (
+        f"new scenario {scenario.name}: add its θ=1 wavefront cycles to "
+        f"GOLDEN_THETA1_CYCLES")
+    golden = GOLDEN_THETA1_CYCLES[scenario.name]
+    cs = next(c for c in explorer.compiled if c.scenario.key == scenario.key)
+    est = float(explorer.baselines[explorer.compiled.index(cs)])
+    assert est == pytest.approx(golden, abs=0.5), (cs.name, est, golden)
+    sim = cs.simulate()
+    tol = max(scenario.sim_tol, 1e-9)
+    assert abs(golden - sim) / sim <= tol, (cs.name, golden, sim)
 
 
 def test_matrix_has_exact_cell_and_required_extent():
@@ -92,6 +130,31 @@ def test_pareto_front_deterministic_and_order_invariant():
     pts = lambda idx, o: sorted(map(tuple, np.round(o[idx], 12)))
     assert pts(f1, objs) == pts(fp, objs[perm])
     assert 17 not in set(f1.tolist())
+
+
+def test_pareto_front_ignores_nonfinite_rows():
+    """Regression: a candidate whose sweep diverges (NaN/inf objectives)
+    used to corrupt the lexsort-based frontier silently — an inf-latency
+    row could enter the frontier purely by having the smallest cost, and a
+    NaN row breaks the sort's ordering contract.  Non-finite rows must be
+    dropped with a warning and never appear in (or displace) the result."""
+    clean = np.asarray([[1.0, 3.0], [2.0, 2.0], [3.0, 1.0], [2.5, 2.5]])
+    base = pareto_front(clean)
+    dirty = np.concatenate([clean, [[np.nan, 0.1], [np.inf, 0.05],
+                                    [0.01, np.nan], [-np.inf, -np.inf]]])
+    with pytest.warns(RuntimeWarning, match="non-finite"):
+        front = pareto_front(dirty)
+    # identical frontier, by original-row index
+    assert np.array_equal(front, base)
+    assert not (set(front.tolist()) & {4, 5, 6, 7})
+    # all-non-finite input yields an empty frontier, not a crash
+    with pytest.warns(RuntimeWarning, match="non-finite"):
+        assert pareto_front(dirty[4:]).size == 0
+    # finite input stays warning-free
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        assert np.array_equal(pareto_front(clean), base)
 
 
 def test_baseline_candidate_has_unit_latency(explorer):

@@ -14,6 +14,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.acadl.storage import SetAssociativeCache
 from repro.core.aidg import build_aidg, longest_path
+from repro.core.aidg.explorer import pareto_front
 from repro.core.acadl.sim import build_trace
 from repro.core.archs import make_gamma_ag
 from repro.core.mapping.gemm import gamma_gemm, init_gemm_memory
@@ -100,6 +101,68 @@ def test_aidg_monotone_in_work(s1, s2):
     t1 = longest_path(aidg, work=aidg.work * np.float32(s1)).max()
     t2 = longest_path(aidg, work=aidg.work * np.float32(max(s1, s2))).max()
     assert t2 >= t1 - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# pareto_front invariants (repro.core.aidg.explorer)
+# ---------------------------------------------------------------------------
+
+# a coarse grid of finite objective values: duplicates and exact ties are
+# *likely*, which is exactly the regime where frontier bugs hide
+_objective = st.integers(0, 8).map(lambda v: v / 4.0)
+_obj_rows = st.lists(st.tuples(_objective, _objective), min_size=1,
+                     max_size=40).map(lambda r: np.asarray(r, np.float64))
+
+
+def _dominates(a, b):
+    return bool(np.all(a <= b) and np.any(a < b))
+
+
+@given(_obj_rows)
+@settings(**SETTINGS)
+def test_pareto_front_mutually_nondominated(objs):
+    front = pareto_front(objs)
+    assert front.size > 0
+    for i in front:
+        for j in front:
+            if i != j:
+                assert not _dominates(objs[j], objs[i]), (i, j)
+
+
+@given(_obj_rows)
+@settings(**SETTINGS)
+def test_pareto_front_dominates_every_excluded_row(objs):
+    front = pareto_front(objs)
+    kept = set(front.tolist())
+    for j in range(len(objs)):
+        if j not in kept:
+            assert any(_dominates(objs[i], objs[j]) or
+                       np.array_equal(objs[i], objs[j]) for i in front), j
+
+
+@given(_obj_rows, st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_pareto_front_deterministic_under_permutation(objs, seed):
+    f1 = pareto_front(objs)
+    assert np.array_equal(f1, pareto_front(objs))        # same input, twice
+    perm = np.random.default_rng(seed).permutation(len(objs))
+    f2 = pareto_front(objs[perm])
+    pts = lambda o, idx: sorted(map(tuple, o[idx]))
+    assert pts(objs, f1) == pts(objs[perm], f2)          # same point set
+    assert np.all(np.diff(objs[f1, 0]) >= 0)             # sorted by obj 0
+
+
+@given(_obj_rows)
+@settings(**SETTINGS)
+def test_pareto_front_keeps_exactly_one_of_duplicates(objs):
+    # force at least one exact duplicate pair
+    objs = np.concatenate([objs, objs[:1]])
+    front = pareto_front(objs)
+    pts = [tuple(objs[i]) for i in front]
+    assert len(pts) == len(set(pts))                     # no duplicate points
+    for i in front:                                      # first occurrence wins
+        first = int(np.nonzero((objs == objs[i]).all(axis=1))[0][0])
+        assert i == first, (i, first)
 
 
 @given(st.lists(st.integers(0, 255), min_size=1, max_size=60),
