@@ -23,6 +23,12 @@ Sections:
   at their respective candidate budgets, on the latency·cost objective.
   The small-budget run asserts the gradient incumbent beats random search
   at an equal candidate budget.
+* ``network/matrix`` — the whole-network matrix (``repro.core.network``):
+  every default (architecture, DNN) cell evaluated end-to-end per
+  candidate, vs the per-cell event-sim oracle (each unique tile program
+  simulated once, memoized across cells, then max-plus composed — the
+  same composition the estimate uses).  The small-budget run asserts
+  ≥ 20x throughput over the oracle.
 
 Budget: set ``BENCH_BUDGET=small`` for a CI-smoke run (few candidates, same
 code paths, loose throughput sanity asserted so evaluator regressions fail
@@ -206,8 +212,53 @@ def _bench_gradient(rows: List[Dict]) -> None:
             f"({rand_score:.4f} at the same budget)")
 
 
+def _bench_network(rows: List[Dict]) -> None:
+    from repro.core.aidg.explorer import Explorer, random_candidates
+    from repro.core.network import default_network_scenarios
+
+    ex = Explorer(scenarios=default_network_scenarios())
+    S = len(ex.compiled)
+    layers = sum(cn.n_layers for cn in ex.compiled)
+    instances = sum(cn.stack.instances for cn in ex.compiled)
+    B = 32 if SMALL else 256
+    cand = random_candidates(ex.space, B, seed=0)
+    configs = B * S
+
+    dt, res = _time_explore(ex, cand)
+    net_cps = configs / dt
+
+    # oracle cost per cell: every unique tile program simulated once
+    # (memoized across cells — tile programs are shared through the AIDG
+    # cache, and the oracle gets the same reuse the estimator gets), then
+    # composed analytically
+    sim_total = 0.0
+    tile_sims: Dict[int, float] = {}
+    for cn in ex.compiled:
+        t0 = time.perf_counter()
+        for cell in cn.cells:
+            if id(cell) not in tile_sims:
+                tile_sims[id(cell)] = cell.simulate()
+        sim_total += time.perf_counter() - t0
+    sim_cps = S / sim_total
+
+    best = int(np.argmin(res.latency))
+    rows.append({"name": "network/matrix", "us_per_call": dt / configs * 1e6,
+                 "derived": (f"cells={S};candidates={B};"
+                             f"unique_layers={layers};"
+                             f"instances={instances:.0f};"
+                             f"configs_per_s={net_cps:.0f};"
+                             f"eventsim_configs_per_s={sim_cps:.2f};"
+                             f"speedup_vs_eventsim={net_cps / sim_cps:.0f}x;"
+                             f"best_latency={res.latency[best]:.3f}")})
+    if SMALL and net_cps < 20.0 * sim_cps:
+        raise AssertionError(
+            f"network sweep throughput regressed: {net_cps:.1f} configs/s "
+            f"is under 20x the event-sim oracle ({sim_cps:.2f}/s)")
+
+
 def run(rows: List[Dict]) -> None:
     _bench_single(rows)
     _bench_matrix(rows)
     _bench_depth(rows)
     _bench_gradient(rows)
+    _bench_network(rows)

@@ -86,6 +86,7 @@ class AIDG:
 
     @property
     def edges(self) -> int:
+        """Number of real (non-padding) dependency edges in the DAG."""
         return int((self.preds >= 0).sum())
 
 
@@ -121,6 +122,10 @@ def _fetch_schedule(ag: ArchitectureGraph, trace: Sequence[TraceEntry]
 
 def build_aidg(ag: ArchitectureGraph, trace: Sequence[TraceEntry],
                include_buffer_edges: bool = True) -> AIDG:
+    """Trace -> AIDG: derive per-node work/base and the forward dependency
+    edges (data, structural, branch-bubble, issue-buffer — see the module
+    docstring), pad predecessors to CSR form, record the storage queueing
+    and DSE metadata, and run the build-time compile pipeline."""
     n = len(trace)
     work = np.ones(n, dtype=np.float32)
     fu_lat_arr = np.zeros(n, dtype=np.float32)
@@ -302,10 +307,12 @@ class LevelSchedule:
 
     @property
     def n_levels(self) -> int:
+        """Critical depth of the DAG = sequential wavefront steps."""
         return int(self.level_nodes.shape[0])
 
     @property
     def width(self) -> int:
+        """Widest level = the wavefront evaluator's window size."""
         return int(self.level_nodes.shape[1])
 
     @property
@@ -370,6 +377,7 @@ class CompiledAIDG:
 
     @property
     def n(self) -> int:
+        """Node (instruction) count of the underlying AIDG."""
         return self.aidg.n
 
 

@@ -39,11 +39,18 @@ from .maxplus import (DEFAULT_ENGINE, fixed_point_jax, fixed_point_soft,
                       softmax_reduce, softmaximum)
 
 __all__ = ["DSEProblem", "make_problem", "evaluate_theta", "compiled_sweep",
-           "sweep", "evaluate_theta_soft", "grad_sweep"]
+           "sweep", "evaluate_theta_soft", "grad_sweep", "LayerStack",
+           "NETWORK_MODES", "compiled_network_sweep", "grad_network_sweep"]
 
 
 @dataclass
 class DSEProblem:
+    """One workload's parameterized timing model: the immutable AIDG plus
+    the gather maps that turn a θ vector (one factor per op class / storage
+    class) into per-node latency scalings, and the per-problem cache of
+    compiled evaluators.  Built once per (architecture, workload) cell by
+    ``make_problem``; every sweep re-weights this structure."""
+
     aidg: AIDG
     op_names: List[str]          # op-class index -> name
     storage_names: List[str]     # storage-class index -> name
@@ -61,20 +68,26 @@ class DSEProblem:
 
     @property
     def n_op(self) -> int:
+        """Number of op classes = columns of a θ_op candidate row."""
         return len(self.op_names)
 
     @property
     def n_st(self) -> int:
+        """Number of storage classes = columns of a θ_st candidate row."""
         return len(self.storage_names)
 
     @property
     def compiled_aidg(self) -> CompiledAIDG:
+        """The build-time compile artifact (level schedule + gathers)."""
         if self.caidg is None:  # hand-built problems compile lazily
             self.caidg = compile_aidg(self.aidg)
         return self.caidg
 
 
 def make_problem(aidg: AIDG) -> DSEProblem:
+    """AIDG -> DSEProblem: name the op/storage classes, build the per-node
+    gather indices, and run the build-time compile pipeline
+    (``compile_aidg``) so every sweep shares one level schedule."""
     op_names = [None] * len(aidg.classes)
     for name, idx in aidg.classes.items():
         op_names[idx] = name
@@ -227,4 +240,179 @@ def grad_sweep(prob: DSEProblem, op_idx: np.ndarray, st_idx: np.ndarray,
 
         fn = jax.jit(jax.vmap(jax.value_and_grad(f), in_axes=(0, None)))
         prob._compiled[key] = fn
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# stacked per-layer programs: whole-network end-to-end latency
+# ---------------------------------------------------------------------------
+
+NETWORK_MODES = ("sequential", "pipelined")
+
+
+@dataclass
+class LayerStack:
+    """A whole network as a *stack* of per-layer DSE problems plus the
+    max-plus composition structure (built by ``repro.core.network``).
+
+    ``problems[u]`` is the AIDG of one **unique** layer program; the
+    network's execution order is a sequence of *runs* — maximal stretches
+    of ``run_reps[r]`` consecutive instances of unique layer
+    ``run_layer[r]`` (a transformer's 16 identical blocks are one run of
+    16, a tiled operator's ``tiles`` repeats fold in multiplicatively).
+
+    ``prologue_len[u]`` is the static length of the layer's load-only
+    instruction prefix (no compute op has executed yet): its completion
+    time is the part of the layer a *double-buffered* pipeline can overlap
+    with the previous layer's tail.  ``fits_within[r]`` / ``fits_between[r]``
+    are 0/1 capacity gates — overlap is only credited when the two layers'
+    stationary working sets fit the architecture's on-chip buffer together.
+
+    Composition (per candidate, all in the traced function):
+
+    * ``sequential``: Σ_r reps_r · m_{l(r)} — every instance back-to-back,
+      the mode whose θ = 1 value matches the per-layer event-sim oracle
+      composition exactly.
+    * ``pipelined``: the sequential total minus the credited overlaps
+      min(p_next, m_prev) — never below any single layer, never above the
+      sequential total.
+    """
+
+    problems: List[DSEProblem]
+    prologue_len: np.ndarray        # (L,) int   — load-only prefix length
+    run_layer: np.ndarray           # (R,) int   — unique-layer id per run
+    run_reps: np.ndarray            # (R,) float — instances per run
+    fits_within: np.ndarray         # (R,) float — 0/1 double-buffer gate
+    fits_between: np.ndarray        # (R-1,) float — 0/1 gate to next run
+    _compiled: Dict[Tuple, Callable] = field(default_factory=dict, repr=False)
+
+    @property
+    def n_layers(self) -> int:
+        """Unique per-layer programs in the stack (the compile unit)."""
+        return len(self.problems)
+
+    @property
+    def instances(self) -> float:
+        """Total layer instances composed end-to-end (Σ run reps)."""
+        return float(np.asarray(self.run_reps, np.float64).sum())
+
+
+def _layer_times(prob: DSEProblem, theta_op: jnp.ndarray,
+                 theta_st: jnp.ndarray, n_iters: int, engine: str,
+                 k_prologue: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One layer's (makespan, prologue completion) at θ — the prologue is
+    the hard max over the first ``k_prologue`` (load-only) instructions."""
+    work, st_lat, _ = _reweight(prob, theta_op, theta_st)
+    t = fixed_point_jax(prob.compiled_aidg, n_iters=n_iters, work=work,
+                        storage_lat=st_lat, engine=engine)
+    p = t[:k_prologue].max() if k_prologue > 0 else jnp.float32(0.0)
+    return t.max(), p
+
+
+def _compose(stack: LayerStack, m: jnp.ndarray, p: jnp.ndarray, mode: str,
+             minimum: Callable = jnp.minimum) -> jnp.ndarray:
+    """(L,) per-unique-layer makespans/prologues -> end-to-end cycles.
+    ``minimum`` is the overlap clip — ``jnp.minimum`` on the hard path, a
+    τ-softmin on the smooth one (overlap can't exceed the previous layer's
+    makespan or the next layer's prologue)."""
+    rl = jnp.asarray(stack.run_layer)
+    reps = jnp.asarray(stack.run_reps, jnp.float32)
+    mr, pr = m[rl], p[rl]
+    total = (reps * mr).sum()
+    if mode == "sequential":
+        return total
+    fw = jnp.asarray(stack.fits_within, jnp.float32)
+    within = ((reps - 1.0) * minimum(pr, mr) * fw).sum()
+    if stack.run_layer.shape[0] > 1:
+        fb = jnp.asarray(stack.fits_between, jnp.float32)
+        between = (minimum(pr[1:], mr[:-1]) * fb).sum()
+    else:
+        between = jnp.float32(0.0)
+    return total - within - between
+
+
+def compiled_network_sweep(stack: LayerStack, n_iters: int = 2,
+                           engine: str = DEFAULT_ENGINE,
+                           mode: str = "sequential") -> Callable:
+    """Cached jit(vmap) end-to-end evaluator for a layer stack:
+    ``fn(tuple of (B, n_op_l), tuple of (B, n_st_l)) -> (B,) cycles``.
+
+    The per-layer wavefronts and the max-plus composition live in ONE
+    traced function, so a candidate batch costs one device launch per
+    network cell regardless of depth — and repeated layers are evaluated
+    once per unique program, not once per instance."""
+    if mode not in NETWORK_MODES:
+        raise ValueError(f"mode must be one of {NETWORK_MODES}, got {mode!r}")
+    key = (n_iters, engine, mode)
+    fn = stack._compiled.get(key)
+    if fn is None:
+        ks = [int(k) for k in stack.prologue_len]
+
+        def f(tos, tss):
+            times = [_layer_times(prob, to, ts, n_iters, engine, k)
+                     for prob, k, to, ts
+                     in zip(stack.problems, ks, tos, tss)]
+            m = jnp.stack([t[0] for t in times])
+            p = jnp.stack([t[1] for t in times])
+            return _compose(stack, m, p, mode)
+
+        fn = jax.jit(jax.vmap(f))
+        stack._compiled[key] = fn
+    return fn
+
+
+def _layer_times_soft(prob: DSEProblem, theta_op: jnp.ndarray,
+                      theta_st: jnp.ndarray, tau, n_iters: int,
+                      k_prologue: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Smooth counterpart of ``_layer_times`` (soft floor, soft fixed
+    point, soft reductions) — differentiable in θ everywhere."""
+    work, st_lat, _ = _reweight(prob, theta_op, theta_st,
+                                floor=lambda a, b: softmaximum(a, b, tau))
+    t = fixed_point_soft(prob.compiled_aidg, tau=tau, n_iters=n_iters,
+                         work=work, storage_lat=st_lat)
+    p = (softmax_reduce(t[:k_prologue], tau) if k_prologue > 0
+         else jnp.float32(0.0))
+    return softmax_reduce(t, tau), p
+
+
+def grad_network_sweep(stack: LayerStack, projections: Sequence[Tuple],
+                       n_iters: int = 2, mode: str = "sequential"
+                       ) -> Callable:
+    """Cached ``jit(vmap(value_and_grad))`` of *end-to-end* network latency
+    from shared knob space: ``fn(knobs (B, K), tau) -> (soft cycles (B,),
+    d cycles/d knob (B, K))``.
+
+    ``projections[u]`` is ``DesignSpace.projection(problems[u])``; baking
+    every per-layer gather into one traced function chains projection →
+    per-layer soft wavefront → max-plus composition inside autodiff, so
+    the K shared knobs receive the full network's gradient in one call.
+    In ``sequential`` mode the soft value upper-bounds the hard one (every
+    softened reduction does); ``pipelined`` additionally softens the
+    overlap clip with a softmin, which approximates rather than bounds."""
+    if mode not in NETWORK_MODES:
+        raise ValueError(f"mode must be one of {NETWORK_MODES}, got {mode!r}")
+    projections = [(np.asarray(oi, np.int64), np.asarray(si, np.int64))
+                   for oi, si in projections]
+    key = (("grad", n_iters, mode)
+           + tuple(oi.tobytes() + si.tobytes() for oi, si in projections))
+    fn = stack._compiled.get(key)
+    if fn is None:
+        ks = [int(k) for k in stack.prologue_len]
+        gathers = [(jnp.asarray(oi), jnp.asarray(si))
+                   for oi, si in projections]
+
+        def f(knobs, tau):
+            padded = jnp.concatenate(
+                [knobs, jnp.ones((1,), knobs.dtype)])   # identity column
+            times = [_layer_times_soft(prob, padded[oi], padded[si], tau,
+                                       n_iters, k)
+                     for prob, k, (oi, si)
+                     in zip(stack.problems, ks, gathers)]
+            m = jnp.stack([t[0] for t in times])
+            p = jnp.stack([t[1] for t in times])
+            softmin = lambda a, b: -softmaximum(-a, -b, tau)
+            return _compose(stack, m, p, mode, minimum=softmin)
+
+        fn = jax.jit(jax.vmap(jax.value_and_grad(f), in_axes=(0, None)))
+        stack._compiled[key] = fn
     return fn

@@ -62,8 +62,8 @@ from .maxplus import DEFAULT_ENGINE, ENGINES
 
 __all__ = [
     "Scenario", "CompiledScenario", "default_scenarios", "compile_scenario",
-    "clear_scenario_cache", "Knob", "DesignSpace", "DEFAULT_SPACE",
-    "grid_candidates", "random_candidates", "pareto_front",
+    "clear_scenario_cache", "scenario_cache_stats", "Knob", "DesignSpace",
+    "DEFAULT_SPACE", "grid_candidates", "random_candidates", "pareto_front",
     "Explorer", "ExplorationResult",
 ]
 
@@ -89,13 +89,14 @@ class Scenario:
 
     @property
     def name(self) -> str:
+        """Display name, ``arch/workload``."""
         return f"{self.arch}/{self.workload}"
 
     @property
     def key(self) -> Tuple:
-        # the builder's identity participates so two scenarios sharing
-        # (arch, workload, params) but built by different functions don't
-        # silently alias in the AIDG cache
+        """AIDG-cache key: (arch, workload, params, builder identity) — the
+        builder participates so two scenarios sharing sizes but built by
+        different functions don't silently alias in the cache."""
         return (self.arch, self.workload, self.params,
                 getattr(self.build, "__module__", ""),
                 getattr(self.build, "__qualname__", ""))
@@ -209,7 +210,13 @@ def default_scenarios() -> List[Scenario]:
 @dataclass
 class CompiledScenario:
     """Trace + AIDG + DSEProblem for one cell, built once and re-used by
-    every sweep (the graph is *structure*; θ only re-weights it)."""
+    every sweep (the graph is *structure*; θ only re-weights it).
+
+    Implements the **cell protocol** the :class:`Explorer` evaluates
+    against — ``projection`` / ``evaluate`` / ``accumulate_weights`` /
+    ``grad_fn`` / ``simulate`` / ``stats_row`` — so operator cells and
+    whole-network cells (``repro.core.network.CompiledNetwork``) are
+    interchangeable rows of the scenario matrix."""
 
     scenario: Scenario
     aidg: AIDG
@@ -218,10 +225,12 @@ class CompiledScenario:
 
     @property
     def name(self) -> str:
+        """Display name inherited from the scenario (``arch/workload``)."""
         return self.scenario.name
 
     @property
     def compiled_aidg(self) -> CompiledAIDG:
+        """The build-time compilation artifact shared by every sweep."""
         return self.problem.compiled_aidg
 
     @property
@@ -230,6 +239,45 @@ class CompiledScenario:
         CompiledAIDG): n_levels sequential wavefront steps instead of n."""
         return self.compiled_aidg.schedule
 
+    # -- the cell protocol (shared with repro.core.network) -----------------
+
+    def projection(self, space: "DesignSpace"):
+        """Cell-opaque projection data for ``space`` (cached per cell by
+        the Explorer): here the (op -> knob, storage -> knob) gather maps."""
+        return space.projection(self.problem)
+
+    def evaluate(self, space: "DesignSpace", knob_thetas: np.ndarray,
+                 proj=None, n_iters: int = 2, chunk: Optional[int] = None,
+                 engine: str = DEFAULT_ENGINE) -> np.ndarray:
+        """(B, n_knobs) shared candidates -> (B,) estimated cycles via the
+        cached compiled sweep for this cell's problem."""
+        to, ts = space.theta_for(self.problem, knob_thetas, proj)
+        return sweep(self.problem, to, ts, n_iters=n_iters, chunk=chunk,
+                     engine=engine)
+
+    def accumulate_weights(self, space: "DesignSpace", proj,
+                           w: np.ndarray) -> None:
+        """Add this cell's parameter volume per knob into ``w`` (in place):
+        summed instruction op_scale for op knobs, summed mem_words for
+        storage knobs."""
+        op_idx, st_idx = proj
+        aidg = self.aidg
+        node_knob = op_idx[aidg.op_class]
+        for ki in range(space.n):
+            w[ki] += float(aidg.op_scale[node_knob == ki].sum())
+        for st_name, cid in self.problem.node_storage.items():
+            ki = st_idx[cid]
+            if ki < space.n:
+                nodes = aidg.storage_nodes[st_name]
+                w[ki] += float(aidg.mem_words[nodes].sum())
+
+    def grad_fn(self, proj, n_iters: int = 2) -> Callable:
+        """Cached ``jit(vmap(value_and_grad))`` from shared knob space:
+        ``fn(knobs (B, K), tau) -> (soft cycles (B,), gradient (B, K))``."""
+        from .dse import grad_sweep
+        op_idx, st_idx = proj
+        return grad_sweep(self.problem, op_idx, st_idx, n_iters=n_iters)
+
     def simulate(self) -> int:
         """Cycle-accurate oracle: rebuild the AG from scratch (the builder's
         functional pre-execution mutates memory) and run the event
@@ -237,14 +285,30 @@ class CompiledScenario:
         ag, prog = self.scenario.build()
         return simulate(ag, prog).cycles
 
+    def stats_row(self) -> Dict[str, float]:
+        """Level-schedule statistics: node count vs critical depth."""
+        s = self.schedule
+        return {"name": self.name, "n": s.n, "levels": s.n_levels,
+                "max_width": s.width,
+                "parallelism": round(s.parallelism, 2)}
+
 
 _AIDG_CACHE: Dict[Tuple, CompiledScenario] = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
 
 
 def compile_scenario(sc: Scenario, use_cache: bool = True) -> CompiledScenario:
-    """(arch, workload) -> CompiledScenario, cached on ``Scenario.key``."""
+    """(arch, workload) -> CompiledScenario, cached on ``Scenario.key``.
+
+    The cache is process-wide and counts hits/misses
+    (``scenario_cache_stats``) — the network frontend leans on it so a
+    layer shape repeated across a model (or across models) compiles once.
+    """
     if use_cache and sc.key in _AIDG_CACHE:
+        _CACHE_STATS["hits"] += 1
         return _AIDG_CACHE[sc.key]
+    if use_cache:
+        _CACHE_STATS["misses"] += 1
     ag, prog = sc.build()
     trace = build_trace(ag, prog)
     aidg = build_aidg(ag, trace)
@@ -256,8 +320,17 @@ def compile_scenario(sc: Scenario, use_cache: bool = True) -> CompiledScenario:
     return cs
 
 
+def scenario_cache_stats() -> Dict[str, int]:
+    """Process-wide AIDG-cache counters: ``{"hits": ..., "misses": ...}``
+    (uncached ``compile_scenario(use_cache=False)`` builds count neither)."""
+    return dict(_CACHE_STATS)
+
+
 def clear_scenario_cache() -> None:
+    """Drop every cached CompiledScenario and zero the hit/miss counters."""
     _AIDG_CACHE.clear()
+    _CACHE_STATS["hits"] = 0
+    _CACHE_STATS["misses"] = 0
 
 
 # ---------------------------------------------------------------------------
@@ -286,10 +359,12 @@ class DesignSpace:
 
     @property
     def n(self) -> int:
+        """Number of shared knobs = columns of a candidate row."""
         return len(self.knobs)
 
     @property
     def names(self) -> List[str]:
+        """Knob names, in candidate-column order."""
         return [k.name for k in self.knobs]
 
     def _match(self, patterns: List[str], name: str) -> int:
@@ -327,6 +402,7 @@ class DesignSpace:
         return padded[:, op_idx], padded[:, st_idx]
 
     def clip(self, knob_thetas: np.ndarray) -> np.ndarray:
+        """Project candidates into the per-knob [lo, hi] box."""
         lo = np.asarray([k.lo for k in self.knobs], np.float32)
         hi = np.asarray([k.hi for k in self.knobs], np.float32)
         return np.clip(np.asarray(knob_thetas, np.float32), lo, hi)
@@ -420,6 +496,8 @@ class ExplorationResult:
     pareto: np.ndarray          # indices into candidates, sorted by latency
 
     def frontier(self) -> List[Dict[str, float]]:
+        """The Pareto-optimal designs as dict rows (index, objectives, and
+        per-knob θ), sorted by latency."""
         rows = []
         for i in self.pareto:
             row = {"index": int(i), "latency": float(self.latency[i]),
@@ -447,22 +525,41 @@ class Explorer:
     ``"wavefront"`` (default — a ``lax.scan`` over topological levels,
     sequential depth = the DAG's critical depth), ``"scan"`` (one step per
     node), or ``"blocked"`` (max-plus Kleene-closure blocks).
+
+    ``networks=True`` appends the whole-network matrix
+    (``repro.core.network.default_network_scenarios``); a sequence of
+    model names appends just those networks.  Each added cell is
+    a full DNN lowered layer-by-layer onto one architecture and scored by
+    *end-to-end* latency.  Any object implementing the cell protocol
+    (``compile`` on the scenario; ``projection`` / ``evaluate`` /
+    ``accumulate_weights`` / ``grad_fn`` / ``simulate`` / ``stats_row`` on
+    the compiled cell) can sit in the matrix next to operator cells.
     """
 
     def __init__(self, scenarios: Optional[Sequence[Scenario]] = None,
                  space: DesignSpace = DEFAULT_SPACE, n_iters: int = 2,
-                 use_cache: bool = True, engine: str = DEFAULT_ENGINE):
+                 use_cache: bool = True, engine: str = DEFAULT_ENGINE,
+                 networks=False):
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}; "
                              f"choose from {ENGINES}")
         self.space = space
         self.n_iters = n_iters
         self.engine = engine
+        cells = list(default_scenarios() if scenarios is None else scenarios)
+        if networks:
+            from ..network import default_network_scenarios
+            # True -> the full default network matrix; a sequence of model
+            # names -> just those networks (still every mapping arch); a
+            # bare string would iterate its characters, so wrap it
+            if isinstance(networks, str):
+                networks = [networks]
+            cells += default_network_scenarios(
+                networks=None if networks is True else networks)
         self.compiled: List[CompiledScenario] = [
-            compile_scenario(s, use_cache)
-            for s in (default_scenarios() if scenarios is None else scenarios)]
-        self._projections = [space.projection(cs.problem)
-                             for cs in self.compiled]
+            s.compile(use_cache) if hasattr(s, "compile")
+            else compile_scenario(s, use_cache) for s in cells]
+        self._projections = [cs.projection(space) for cs in self.compiled]
         self._weights: Optional[np.ndarray] = None
         # normalization denominators from the SAME evaluator the sweeps use
         # (compiled_sweep at θ = 1), so the baseline candidate's latency is
@@ -473,23 +570,21 @@ class Explorer:
 
     @property
     def scenario_names(self) -> List[str]:
+        """Cell names, in matrix-column order."""
         return [cs.name for cs in self.compiled]
 
     @property
     def baselines(self) -> np.ndarray:
+        """(S,) per-cell cycles at θ = 1 from the same compiled evaluator
+        the sweeps use — the latency-normalization denominators."""
         return self._baselines
 
     def level_stats(self) -> List[Dict[str, float]]:
         """Per-scenario level-schedule statistics: node count vs critical
         depth — the sequential-step compression the wavefront engine gets
-        over the per-node scan."""
-        rows = []
-        for cs in self.compiled:
-            s = cs.schedule
-            rows.append({"name": cs.name, "n": s.n, "levels": s.n_levels,
-                         "max_width": s.width,
-                         "parallelism": round(s.parallelism, 2)})
-        return rows
+        over the per-node scan.  Network cells report their unique-layer
+        aggregate."""
+        return [cs.stats_row() for cs in self.compiled]
 
     # -- cost/area proxy ----------------------------------------------------
 
@@ -500,16 +595,8 @@ class Explorer:
         if self._weights is not None:
             return self._weights
         w = np.zeros(self.space.n, dtype=np.float64)
-        for cs, (op_idx, st_idx) in zip(self.compiled, self._projections):
-            aidg = cs.aidg
-            node_knob = op_idx[aidg.op_class]
-            for ki in range(self.space.n):
-                w[ki] += float(aidg.op_scale[node_knob == ki].sum())
-            for st_name, cid in cs.problem.node_storage.items():
-                ki = st_idx[cid]
-                if ki < self.space.n:
-                    nodes = aidg.storage_nodes[st_name]
-                    w[ki] += float(aidg.mem_words[nodes].sum())
+        for cs, proj in zip(self.compiled, self._projections):
+            cs.accumulate_weights(self.space, proj, w)
         total = w.sum()
         if total <= 0:
             w[:] = 1.0
@@ -535,11 +622,9 @@ class Explorer:
         kt = np.asarray(knob_thetas, np.float32)
         if kt.ndim == 1:
             kt = kt[None, :]
-        cols = []
-        for cs, proj in zip(self.compiled, self._projections):
-            to, ts = self.space.theta_for(cs.problem, kt, proj)
-            cols.append(sweep(cs.problem, to, ts, n_iters=self.n_iters,
-                              chunk=chunk, engine=self.engine))
+        cols = [cs.evaluate(self.space, kt, proj, n_iters=self.n_iters,
+                            chunk=chunk, engine=self.engine)
+                for cs, proj in zip(self.compiled, self._projections)]
         return np.stack(cols, axis=1)
 
     def explore(self, knob_thetas: np.ndarray,

@@ -37,7 +37,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...optim.adamw import AdamWConfig, adamw_init, adamw_update
-from .dse import grad_sweep
 from .explorer import Explorer
 
 __all__ = ["GradientResult", "GradientExplorer"]
@@ -59,6 +58,7 @@ class GradientResult:
 
     @property
     def best_start(self) -> int:
+        """Index of the start whose hard final score won."""
         return int(np.argmin(self.final_scores))
 
 
@@ -80,9 +80,11 @@ class GradientExplorer:
         self.explorer = explorer
         self.objective = objective
         self.space = explorer.space
-        self._fns = [grad_sweep(cs.problem, op_idx, st_idx,
-                                n_iters=explorer.n_iters)
-                     for cs, (op_idx, st_idx)
+        # one cached jit(vmap(value_and_grad)) per cell, built through the
+        # cell protocol so operator cells and whole-network cells both
+        # contribute their d(cycles)/d(knob) — end-to-end for networks
+        self._fns = [cs.grad_fn(proj, n_iters=explorer.n_iters)
+                     for cs, proj
                      in zip(explorer.compiled, explorer._projections)]
         self._baselines = np.asarray(explorer.baselines, np.float64)
         self._weights = explorer.knob_weights().astype(np.float64)

@@ -108,6 +108,9 @@ def _scan_impl(n: int, work: jnp.ndarray, base: jnp.ndarray,
 
 def longest_path_scan(aidg: AIDGLike, work: Optional[jnp.ndarray] = None,
                       base: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Exact forward relaxation as a ``lax.scan`` over nodes (one
+    sequential step per instruction) — the reference device path the
+    wavefront and blocked engines are checked against."""
     ca = _as_compiled(aidg)
     a = ca.aidg
     w = jnp.asarray(a.work if work is None else work, jnp.float32)

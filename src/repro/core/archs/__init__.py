@@ -28,6 +28,23 @@ ARCH_REGISTRY = {
     "tpu_v5e": make_tpu_v5e_ag,
 }
 
+# On-chip double-buffer capacity per architecture, in data words: the
+# storage a pipelined network schedule (repro.core.network) can stage the
+# NEXT layer's stationary operand into while the current layer computes.
+# Derived from each model: OMA's scalar data cache, one systolic-array
+# worth of PE registers plus stream buffers, the Γ̈ scratchpad, the
+# Eyeriss GLB (108 KB class), the aggregate Plasticine PMU capacity, and
+# the TPU-v5e VMEM (128 MiB of bf16 words).  Coarse by construction — the
+# capacity gate only decides whether inter-layer overlap is credited.
+ARCH_CAPACITY_WORDS = {
+    "oma": 4 * 1024,
+    "systolic": 16 * 1024,
+    "gamma": 64 * 1024,
+    "eyeriss": 54 * 1024,
+    "plasticine": 256 * 1024,
+    "tpu_v5e": TPU_V5E["vmem_bytes"] // 2,
+}
+
 __all__ = [
     "generate_oma", "make_oma_ag", "OMA_SCALAR_OPS",
     "ProcessingElement", "LoadUnit", "StoreUnit", "FetchUnit",
@@ -36,5 +53,5 @@ __all__ = [
     "EyerissPE", "generate_eyeriss", "make_eyeriss_ag",
     "generate_plasticine", "make_plasticine_ag",
     "TPU_V5E", "generate_tpu_v5e", "make_tpu_v5e_ag",
-    "ARCH_REGISTRY",
+    "ARCH_REGISTRY", "ARCH_CAPACITY_WORDS",
 ]

@@ -219,6 +219,32 @@ def _gamma_gemm_op(call: OperatorCall, units=(("lsu0", "matMulFu0", "vrf0"),),
     return gamma_gemm(m, k, n, tile=tile, units=units)
 
 
+@register_operator("gamma", "attention")
+def _gamma_attention_op(call: OperatorCall,
+                        units=(("lsu0", "matAddFu0", "vrf0"),),
+                        tile: int = 8) -> List[Instruction]:
+    """Attention -> Γ̈ ``t_attn`` tile stream (``mapping.fused``), the
+    q/kv extents capped so the emitted stream stays simulator-sized."""
+    from .fused import gamma_attention
+    seq = max(tile, min(call.m * call.count, 256) // tile * tile)
+    ctx = max(tile, min(call.k, 128) // tile * tile)
+    hd = max(1, min(call.n // 2, 64))
+    return gamma_attention(seq, ctx, hd, tile=tile, units=units)
+
+
+@register_operator("gamma", "scan")
+def _gamma_scan_op(call: OperatorCall,
+                   units=(("lsu0", "matAddFu0", "vrf0"),),
+                   tile: int = 8) -> List[Instruction]:
+    """Selective scan -> Γ̈ chunked-scan stream; tokens capped, state
+    columns striped across the provided units."""
+    from .fused import gamma_scan
+    tokens = max(tile, min(call.m * call.count, 1024) // tile * tile)
+    d_state = max(len(units), min(call.k, 64))
+    d_state -= d_state % len(units)
+    return gamma_scan(tokens, d_state, tile=tile, units=units)
+
+
 def map_to_tpu(cfg: ModelConfig, shape: ShapeConfig,
                per_device: int = 512) -> List[Instruction]:
     """Full-step operator stream mapped onto the TPU-v5e ACADL model.
@@ -238,12 +264,18 @@ def map_to_tpu(cfg: ModelConfig, shape: ShapeConfig,
 
 def map_to_gamma(cfg: ModelConfig, shape: ShapeConfig,
                  units=(("lsu0", "matMulFu0", "vrf0"),)) -> List[Instruction]:
+    """Full-step operator stream mapped onto the Γ̈ ACADL model: GEMMs via
+    the matMul units, attention/scan via the matAdd units (their register
+    triples derived by name from ``units``); unmapped kinds are skipped."""
+    attn_units = tuple((lsu, fu.replace("matMulFu", "matAddFu"), vrf)
+                       for lsu, fu, vrf in units)
     prog: List[Instruction] = []
     for call in extract_operators(cfg, shape):
-        if call.op != "gemm":
+        fn = UMA_REGISTRY.get(("gamma", call.op))
+        if fn is None:
             continue
-        fn = UMA_REGISTRY[("gamma", "gemm")]
-        prog.extend(fn(call, units=units))
+        kw = {"units": units if call.op == "gemm" else attn_units}
+        prog.extend(fn(call, **kw))
         if len(prog) > 4000:   # bounded stream for the event simulator
             break
     return prog

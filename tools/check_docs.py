@@ -1,8 +1,18 @@
 #!/usr/bin/env python
-"""Docs lint: every ```python block in README.md and docs/*.md must parse,
-and every import statement in those blocks must actually resolve against
-the installed package — so the documentation can't silently drift from the
-API.  Run from the repo root:
+"""Docs lint — keeps the documentation from drifting off the code.
+
+Four checks over README.md, docs/*.md, and docs/api/*.md:
+
+1. every ```python block parses, and every import statement in it
+   resolves against the installed package;
+2. every relative markdown link points at a file that exists, and every
+   ``#anchor`` (same-file or cross-file) matches a real heading;
+3. every backticked ``repro.…`` dotted path in docs/paper_map.md resolves
+   via import + getattr — the paper cross-reference table can't go stale;
+4. ``docs/api/`` matches what ``tools/gen_api_docs.py`` would generate
+   (drift check, which also enforces the public-docstring audit).
+
+Run from the repo root:
 
     PYTHONPATH=src python tools/check_docs.py
 """
@@ -10,17 +20,24 @@ API.  Run from the repo root:
 from __future__ import annotations
 
 import ast
+import importlib
 import pathlib
 import re
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 BLOCK_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+# [text](target) — skip images and external/absolute targets
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+MODPATH_RE = re.compile(r"`(repro(?:\.\w+)+)`")
 
 
 def doc_files():
     yield ROOT / "README.md"
     yield from sorted((ROOT / "docs").glob("*.md"))
+    yield from sorted((ROOT / "docs" / "api").glob("*.md"))
 
 
 def check_block(path: pathlib.Path, idx: int, code: str) -> list[str]:
@@ -42,9 +59,78 @@ def check_block(path: pathlib.Path, idx: int, code: str) -> list[str]:
     return errors
 
 
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation, dash
+    spaces (inline code markers stripped first)."""
+    h = heading.replace("`", "").strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _anchors(path: pathlib.Path) -> set[str]:
+    text = FENCE_RE.sub("", path.read_text())
+    return {_slug(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def check_links(path: pathlib.Path) -> list[str]:
+    """Relative links resolve; anchors match headings in their target."""
+    errors = []
+    text = FENCE_RE.sub("", path.read_text())
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        rel, _, anchor = target.partition("#")
+        dest = path if not rel else (path.parent / rel).resolve()
+        if not dest.exists():
+            errors.append(f"{path.name}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md" and anchor not in _anchors(dest):
+            errors.append(f"{path.name}: broken anchor -> {target}")
+    return errors
+
+
+def check_module_paths(path: pathlib.Path) -> list[str]:
+    """Backticked repro.* dotted paths import (trailing attribute OK)."""
+    errors = []
+    for m in MODPATH_RE.finditer(path.read_text()):
+        dotted = m.group(1)
+        parts = dotted.split(".")
+        obj = None
+        for split in range(len(parts), 0, -1):
+            try:
+                obj = importlib.import_module(".".join(parts[:split]))
+                break
+            except ImportError:
+                continue
+        if obj is None:
+            errors.append(f"{path.name}: stale module path `{dotted}`")
+            continue
+        try:
+            for attr in parts[split:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            errors.append(f"{path.name}: stale module path `{dotted}` "
+                          f"(no attribute {attr!r})")
+    return errors
+
+
+def check_api_drift() -> list[str]:
+    """docs/api/ must match the generator's output byte-for-byte (the
+    comparison itself lives in gen_api_docs.diff_against_disk)."""
+    sys.path.insert(0, str(ROOT / "tools"))
+    import gen_api_docs
+    try:
+        rendered = gen_api_docs.build()
+    except SystemExit:
+        return ["gen_api_docs: public API has undocumented symbols "
+                "(see errors above)"]
+    return gen_api_docs.diff_against_disk(rendered)
+
+
 def main() -> int:
     sys.path.insert(0, str(ROOT / "src"))
-    errors, blocks = [], 0
+    errors, blocks, links = [], 0, 0
     for path in doc_files():
         if not path.exists():
             errors.append(f"missing documentation file: {path.name}")
@@ -52,8 +138,17 @@ def main() -> int:
         for idx, m in enumerate(BLOCK_RE.finditer(path.read_text())):
             blocks += 1
             errors.extend(check_block(path, idx, m.group(1)))
-    print(f"checked {blocks} python blocks in "
-          f"{len(list(doc_files()))} documentation files")
+        links += len(LINK_RE.findall(FENCE_RE.sub("", path.read_text())))
+        errors.extend(check_links(path))
+    paper_map = ROOT / "docs" / "paper_map.md"
+    if paper_map.exists():
+        errors.extend(check_module_paths(paper_map))
+    else:
+        errors.append("missing documentation file: paper_map.md")
+    errors.extend(check_api_drift())
+    print(f"checked {blocks} python blocks and {links} links in "
+          f"{len(list(doc_files()))} documentation files "
+          f"(+ paper-map paths, + docs/api drift)")
     for e in errors:
         print(f"ERROR: {e}", file=sys.stderr)
     return 1 if errors else 0

@@ -1,0 +1,161 @@
+#!/usr/bin/env python
+"""Generate ``docs/api/`` from docstrings (and keep it honest in CI).
+
+Covers the AIDG engine and the network frontend — the modules whose public
+surfaces the DSE documentation links into.  One markdown file per module,
+deterministic output, so the generated tree can be committed and
+drift-checked:
+
+    PYTHONPATH=src python tools/gen_api_docs.py           # (re)generate
+    PYTHONPATH=src python tools/gen_api_docs.py --check   # CI: fail on drift
+
+The generator also enforces the docstring audit: any public symbol (module,
+``__all__`` entry, or public method/property of an exported class) without
+a docstring is an error, so new engine code can't land undocumented.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import inspect
+import pathlib
+import sys
+from typing import Dict, List
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+API_DIR = ROOT / "docs" / "api"
+
+MODULES = [
+    "repro.core.aidg.builder",
+    "repro.core.aidg.maxplus",
+    "repro.core.aidg.dse",
+    "repro.core.aidg.explorer",
+    "repro.core.aidg.gradient",
+    "repro.core.network.graph",
+    "repro.core.network.lowering",
+    "repro.core.network.model",
+]
+
+
+import re
+
+_ADDR_RE = re.compile(r"<(?:function|class|built-in \w+) ([\w.<>]+) at "
+                      r"0x[0-9a-f]+>")
+
+
+def _signature(obj) -> str:
+    try:
+        sig = str(inspect.signature(obj))
+    except (ValueError, TypeError):
+        return "(...)"
+    # default values that repr with a memory address (e.g. function
+    # defaults) would make the output nondeterministic — keep the name
+    return _ADDR_RE.sub(r"\1", sig)
+
+
+def _doc(obj, owner: str, errors: List[str]) -> str:
+    doc = inspect.getdoc(obj)
+    if not doc:
+        errors.append(f"missing docstring: {owner}")
+        return "*(undocumented)*"
+    return doc
+
+
+def _class_section(name: str, cls: type, errors: List[str]) -> List[str]:
+    lines = [f"## `{name}{_signature(cls)}`", "",
+             _doc(cls, name, errors), ""]
+    members = []
+    for mname, m in vars(cls).items():
+        if mname.startswith("_"):
+            continue
+        if isinstance(m, property):
+            members.append((mname, f"`{name}.{mname}` *(property)*",
+                            m.fget))
+        elif inspect.isfunction(m):
+            members.append((mname, f"`{name}.{mname}{_signature(m)}`", m))
+    for mname, head, fn in members:
+        doc = _doc(fn, f"{name}.{mname}", errors)
+        lines += [f"### {head}", "", doc, ""]
+    return lines
+
+
+def render_module(dotted: str, errors: List[str]) -> str:
+    mod = importlib.import_module(dotted)
+    lines = [f"# `{dotted}`", "",
+             _doc(mod, dotted, errors), ""]
+    exported = list(getattr(mod, "__all__", []))
+    for name in exported:
+        obj = getattr(mod, name)
+        if getattr(obj, "__module__", dotted) != dotted:
+            continue                      # re-export; documented at home
+        if inspect.isclass(obj):
+            lines += _class_section(name, obj, errors)
+        elif inspect.isfunction(obj):
+            lines += [f"## `{name}{_signature(obj)}`", "",
+                      _doc(obj, f"{dotted}.{name}", errors), ""]
+        else:
+            lines += [f"## `{name}`", "", f"Constant: `{obj!r}`", ""]
+    return "\n".join(lines).rstrip() + "\n"
+
+
+def render_index() -> str:
+    lines = ["# API reference", "",
+             "Generated from docstrings by `tools/gen_api_docs.py` "
+             "(drift-checked in CI — regenerate after changing any public "
+             "docstring):", ""]
+    for dotted in MODULES:
+        lines.append(f"* [`{dotted}`]({dotted}.md)")
+    return "\n".join(lines) + "\n"
+
+
+def build() -> Dict[str, str]:
+    """filename -> rendered content; raises on undocumented public API."""
+    errors: List[str] = []
+    out = {f"{dotted}.md": render_module(dotted, errors)
+           for dotted in MODULES}
+    out["index.md"] = render_index()
+    if errors:
+        for e in errors:
+            print(f"ERROR: {e}", file=sys.stderr)
+        raise SystemExit(1)
+    return out
+
+
+def diff_against_disk(rendered: Dict[str, str]) -> List[str]:
+    """Error strings for every stale/extra page under docs/api/ — the one
+    comparison shared by ``--check`` here and ``tools/check_docs.py``."""
+    errors = [f"docs/api/{fn} is stale — rerun tools/gen_api_docs.py"
+              for fn, content in rendered.items()
+              if not (API_DIR / fn).exists()
+              or (API_DIR / fn).read_text() != content]
+    errors += [f"docs/api/{p.name} has no generating module — delete it or "
+               f"add the module to gen_api_docs.MODULES"
+               for p in sorted(API_DIR.glob("*.md"))
+               if p.name not in rendered]
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="fail if docs/api/ differs from the generated "
+                         "output instead of writing it")
+    args = ap.parse_args()
+    sys.path.insert(0, str(ROOT / "src"))
+    rendered = build()
+    if args.check:
+        errors = diff_against_disk(rendered)
+        for e in errors:
+            print(f"ERROR: {e}", file=sys.stderr)
+        print(f"checked {len(rendered)} generated API pages")
+        return 1 if errors else 0
+    API_DIR.mkdir(parents=True, exist_ok=True)
+    for fn, content in rendered.items():
+        (API_DIR / fn).write_text(content)
+    print(f"wrote {len(rendered)} pages to {API_DIR}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
