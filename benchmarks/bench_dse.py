@@ -12,8 +12,16 @@ Sections:
   oracle), obtained by timing the event simulator on each scenario once and
   extrapolating to the same config count.
 * ``dse/wavefront`` — the same batch through the level-scheduled wavefront
-  engine (the default): sequential depth per sweep is the DAG's critical
+  engine (per-cell): sequential depth per sweep is the DAG's critical
   depth instead of its node count.  Also asserts both engines agree.
+* ``dse/packed`` — the condensed + matrix-packed engine (the Explorer
+  default): the WHOLE scenario/network matrix (operator cells + every
+  default network cell) chain-condensed, padded into shape buckets, and
+  evaluated cells x candidates in ONE jitted dispatch per batch
+  (``repro.core.aidg.dse.PackedMatrix``).  Asserts θ = 1 agreement with
+  the per-cell wavefront engine and the event-sim oracle per cell, and
+  (small budget) that packed throughput is at least the per-cell
+  wavefront row's.
 * ``aidg/depth-vs-n`` — per-scenario level-schedule statistics: node count
   vs critical depth, i.e. how much sequential work the compile pipeline
   (trace → AIDG → LevelSchedule → CompiledAIDG) removes.
@@ -136,6 +144,59 @@ def _bench_matrix(rows: List[Dict]) -> None:
         raise AssertionError(
             f"wavefront engine regressed: {wave_cps:.0f} configs/s vs "
             f"scan {scan_cps:.0f}")
+    _bench_packed(rows, ex_wave, cand, wave_cps, sim_cps)
+
+
+def _bench_packed(rows: List[Dict], ex_wave, cand, wave_cps: float,
+                  sim_cps: float) -> None:
+    from repro.core.aidg.explorer import Explorer
+
+    # the packed engine's natural scope is the WHOLE scenario/network
+    # matrix: every operator cell plus every default (arch, DNN) cell,
+    # chain-condensed and evaluated in one dispatch per batch — repeated
+    # tile programs across network cells are deduplicated into shared rows
+    ex_packed = Explorer(networks=True)        # engine="packed" default
+    S = len(ex_packed.compiled)
+    B = cand.shape[0]
+    configs = B * S
+    dt, res = _time_explore(ex_packed, cand)
+    packed_cps = configs / dt
+    pm = ex_packed.packed_matrix()
+    st = pm.stats()
+
+    # θ = 1 engine agreement: packed == per-cell wavefront (exact) and
+    # within each cell's sim_tol of the event-sim oracle — run on the
+    # operator cells (their oracle is cheap and already simulated above)
+    theta1 = ex_packed.evaluate(
+        np.ones((1, ex_packed.space.n), np.float32))[0]
+    for k, cs in enumerate(ex_wave.compiled):
+        est = float(ex_wave.baselines[k])
+        pk = float(theta1[k])
+        if abs(pk - est) > 0.5:
+            raise AssertionError(
+                f"packed/wavefront θ=1 disagreement on {cs.name}: "
+                f"{pk} vs {est}")
+        sim = cs.simulate()
+        tol = max(cs.scenario.sim_tol, 1e-9)
+        if abs(pk - sim) / sim > tol:
+            raise AssertionError(
+                f"packed θ=1 vs event-sim on {cs.name}: {pk} vs {sim}")
+
+    rows.append({"name": "dse/packed", "us_per_call": dt / configs * 1e6,
+                 "derived": (f"cells={S};candidates={B};engine=packed;"
+                             f"rows={st['rows']};buckets={st['buckets']};"
+                             f"levels={st['levels']}->"
+                             f"{st['levels_condensed']}"
+                             f"({st['level_reduction']:.1f}x);"
+                             f"configs_per_s={packed_cps:.0f};"
+                             f"speedup_vs_wavefront="
+                             f"{packed_cps / wave_cps:.2f}x;"
+                             f"speedup_vs_eventsim="
+                             f"{packed_cps / sim_cps:.0f}x")})
+    if SMALL and packed_cps < wave_cps:
+        raise AssertionError(
+            f"packed matrix engine regressed: {packed_cps:.0f} configs/s "
+            f"is under the per-cell wavefront row ({wave_cps:.0f})")
 
 
 def _bench_depth(rows: List[Dict]) -> None:
@@ -146,15 +207,18 @@ def _bench_depth(rows: List[Dict]) -> None:
     ratios = [s["n"] / s["levels"] for s in stats]
     deepest = max(stats, key=lambda s: s["levels"])
     widest = max(stats, key=lambda s: s["parallelism"])
+    clv = sum(s["levels_condensed"] for s in stats)
     rows.append({"name": "aidg/depth-vs-n", "us_per_call": 0.0,
                  "derived": (f"scenarios={len(stats)};"
                              f"total_nodes={sum(s['n'] for s in stats)};"
                              f"total_levels={sum(s['levels'] for s in stats)};"
+                             f"total_levels_condensed={clv};"
                              f"mean_parallelism={np.mean(ratios):.2f};"
                              f"max_parallelism={max(ratios):.1f}"
                              f"({widest['name']});"
                              f"deepest={deepest['name']}"
-                             f"={deepest['levels']}lv")})
+                             f"={deepest['levels']}lv->"
+                             f"{deepest['levels_condensed']}lv")})
 
 
 def _bench_gradient(rows: List[Dict]) -> None:
@@ -216,7 +280,7 @@ def _bench_network(rows: List[Dict]) -> None:
     from repro.core.aidg.explorer import Explorer, random_candidates
     from repro.core.network import default_network_scenarios
 
-    ex = Explorer(scenarios=default_network_scenarios())
+    ex = Explorer(scenarios=default_network_scenarios())   # packed default
     S = len(ex.compiled)
     layers = sum(cn.n_layers for cn in ex.compiled)
     instances = sum(cn.stack.instances for cn in ex.compiled)
@@ -226,6 +290,13 @@ def _bench_network(rows: List[Dict]) -> None:
 
     dt, res = _time_explore(ex, cand)
     net_cps = configs / dt
+    # the pre-packing path: one stacked sweep per network cell (repeated
+    # tile programs re-evaluated per cell) — the packed engine's dedup is
+    # most visible here
+    ex_pc = Explorer(scenarios=default_network_scenarios(),
+                     engine="wavefront")
+    dt_pc, _ = _time_explore(ex_pc, cand)
+    percell_cps = configs / dt_pc
 
     # oracle cost per cell: every unique tile program simulated once
     # (memoized across cells — tile programs are shared through the AIDG
@@ -246,7 +317,11 @@ def _bench_network(rows: List[Dict]) -> None:
                  "derived": (f"cells={S};candidates={B};"
                              f"unique_layers={layers};"
                              f"instances={instances:.0f};"
+                             f"engine=packed;"
                              f"configs_per_s={net_cps:.0f};"
+                             f"percell_configs_per_s={percell_cps:.0f};"
+                             f"speedup_vs_percell="
+                             f"{net_cps / percell_cps:.2f}x;"
                              f"eventsim_configs_per_s={sim_cps:.2f};"
                              f"speedup_vs_eventsim={net_cps / sim_cps:.0f}x;"
                              f"best_latency={res.latency[best]:.3f}")})
@@ -254,6 +329,10 @@ def _bench_network(rows: List[Dict]) -> None:
         raise AssertionError(
             f"network sweep throughput regressed: {net_cps:.1f} configs/s "
             f"is under 20x the event-sim oracle ({sim_cps:.2f}/s)")
+    if SMALL and net_cps < percell_cps:
+        raise AssertionError(
+            f"packed network sweep regressed: {net_cps:.1f} configs/s "
+            f"is under the per-cell path ({percell_cps:.1f}/s)")
 
 
 def run(rows: List[Dict]) -> None:

@@ -4,17 +4,64 @@ Prints ``name,us_per_call,derived`` CSV (and writes bench_output.txt is the
 caller's job via tee).
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only SECTION[,SECTION]]
+                                                [--json [DIR]]
 
 ``--only dse`` runs just the DSE sections (what the CI smoke step uses,
 together with ``BENCH_BUDGET=small``); sections: paper, dse, workloads,
 kernels.
+
+``--json [DIR]`` additionally persists each section's rows as
+``BENCH_<section>.json`` (default DIR: the repository root) with the
+``derived`` key=value pairs parsed out, so future sessions can assert
+against a *recorded* trajectory instead of re-measuring ad hoc — e.g.
+``BENCH_dse.json["rows"][i]["metrics"]["configs_per_s"]``.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import pathlib
 import sys
 from typing import Dict, List
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def parse_derived(derived: str) -> Dict[str, object]:
+    """``k=v;k=v`` -> dict, values parsed as float where they look like
+    one (a trailing unit such as ``x`` or a ``a->b`` arrow keeps the raw
+    string — the reader decides how to interpret those)."""
+    out: Dict[str, object] = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def write_json(section: str, rows: List[Dict], out_dir: str) -> str:
+    """Persist one section's rows (with parsed metrics) as
+    ``BENCH_<section>.json`` under ``out_dir``; returns the path."""
+    budget = os.environ.get("BENCH_BUDGET", "full") or "full"
+    payload = {
+        "section": section,
+        "budget": budget,
+        "rows": [{"name": r["name"],
+                  "us_per_call": round(float(r["us_per_call"]), 3),
+                  "derived": r["derived"],
+                  "metrics": parse_derived(r["derived"])} for r in rows],
+    }
+    path = os.path.join(out_dir, f"BENCH_{section}.json")
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    return path
 
 
 def main(argv: List[str] = None) -> int:
@@ -26,21 +73,30 @@ def main(argv: List[str] = None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of sections: "
                          + ",".join(sections))
+    ap.add_argument("--json", nargs="?", const=str(REPO_ROOT), default=None,
+                    metavar="DIR",
+                    help="also write BENCH_<section>.json per section "
+                         "(default DIR: repository root)")
     args = ap.parse_args(argv)
     if args.only:
         unknown = set(args.only.split(",")) - set(sections)
         if unknown:
             ap.error(f"unknown section(s) {sorted(unknown)}")
-        mods = [sections[s] for s in args.only.split(",")]
+        names = args.only.split(",")
     else:
-        mods = list(sections.values())
+        names = list(sections)
 
-    rows: List[Dict] = []
-    for mod in mods:
-        mod.run(rows)
+    all_rows: List[Dict] = []
+    for name in names:
+        rows: List[Dict] = []
+        sections[name].run(rows)
+        if args.json is not None:
+            path = write_json(name, rows, args.json)
+            print(f"# wrote {path}", file=sys.stderr)
+        all_rows.extend(rows)
 
     print("name,us_per_call,derived")
-    for r in rows:
+    for r in all_rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
     return 0
 

@@ -5,10 +5,12 @@
 from .builder import (
     AIDG,
     CompiledAIDG,
+    CondensedAIDG,
     LevelSchedule,
     build_aidg,
     compile_aidg,
     compute_level_schedule,
+    condense_aidg,
     estimate_cycles,
     longest_path,
     longest_path_fixed_point,
@@ -20,6 +22,7 @@ from .maxplus import (
     fixed_point_jax,
     fixed_point_soft,
     longest_path_blocked,
+    longest_path_condensed,
     longest_path_scan,
     longest_path_soft,
     longest_path_wavefront,
@@ -30,7 +33,7 @@ from .maxplus import (
     softmax_reduce,
     softmaximum,
 )
-from .dse import (DSEProblem, compiled_sweep, evaluate_theta,
+from .dse import (DSEProblem, PackedMatrix, compiled_sweep, evaluate_theta,
                   evaluate_theta_soft, grad_sweep, make_problem, sweep)
 from .gradient import GradientExplorer, GradientResult
 from .explorer import (
@@ -50,16 +53,17 @@ from .explorer import (
 )
 
 __all__ = [
-    "AIDG", "CompiledAIDG", "LevelSchedule", "build_aidg", "compile_aidg",
-    "compute_level_schedule", "estimate_cycles", "longest_path",
-    "longest_path_fixed_point",
+    "AIDG", "CompiledAIDG", "CondensedAIDG", "LevelSchedule", "build_aidg",
+    "compile_aidg", "compute_level_schedule", "condense_aidg",
+    "estimate_cycles", "longest_path", "longest_path_fixed_point",
     "ENGINES", "DEFAULT_ENGINE",
     "longest_path_wavefront", "longest_path_scan", "longest_path_blocked",
-    "longest_path_soft", "fixed_point_jax", "fixed_point_batch",
-    "fixed_point_soft", "maxplus_closure", "maxplus_matmul_jnp",
+    "longest_path_condensed", "longest_path_soft", "fixed_point_jax",
+    "fixed_point_batch", "fixed_point_soft", "maxplus_closure",
+    "maxplus_matmul_jnp",
     "slot_queue_scan", "slot_queue_soft", "softmaximum", "softmax_reduce",
-    "DSEProblem", "make_problem", "evaluate_theta", "evaluate_theta_soft",
-    "grad_sweep", "compiled_sweep", "sweep",
+    "DSEProblem", "PackedMatrix", "make_problem", "evaluate_theta",
+    "evaluate_theta_soft", "grad_sweep", "compiled_sweep", "sweep",
     "GradientExplorer", "GradientResult",
     "Scenario", "CompiledScenario", "default_scenarios", "compile_scenario",
     "clear_scenario_cache", "Knob", "DesignSpace", "DEFAULT_SPACE",

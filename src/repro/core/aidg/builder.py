@@ -46,13 +46,18 @@ from ..acadl.graph import ArchitectureGraph
 from ..acadl.sim import TraceEntry, build_trace
 from ..acadl.units import FunctionalUnit
 
-__all__ = ["AIDG", "LevelSchedule", "CompiledAIDG", "build_aidg",
-           "compile_aidg", "compute_level_schedule", "longest_path",
-           "longest_path_fixed_point", "estimate_cycles"]
+__all__ = ["AIDG", "LevelSchedule", "CompiledAIDG", "CondensedAIDG",
+           "build_aidg", "compile_aidg", "compute_level_schedule",
+           "condense_aidg", "longest_path", "longest_path_fixed_point",
+           "estimate_cycles"]
 
 MAX_PREDS = 12  # minimum padded predecessor slots per node (jnp/Pallas path);
 #                 build_aidg widens the padding when a node has more — edges
 #                 are never dropped
+
+NEG = -1e18     # max-plus -inf sentinel — THE definition; maxplus/dse
+#                 re-import it (condensation writes it into coupling
+#                 tables the evaluators compare against)
 
 
 @dataclass
@@ -83,6 +88,9 @@ class AIDG:
     # lazily-built compilation artifact (level schedule + padded gathers),
     # memoized here because the DAG structure is immutable per scenario
     _compiled: Optional["CompiledAIDG"] = field(default=None, repr=False)
+    # boundary -> CondensedAIDG, memoized per chain-condensation boundary
+    _condensed: Dict[Optional[int], "CondensedAIDG"] = field(
+        default_factory=dict, repr=False)
 
     @property
     def edges(self) -> int:
@@ -410,6 +418,543 @@ def compile_aidg(aidg: AIDG) -> CompiledAIDG:
     aidg.stats["max_level_width"] = sched.width
     aidg._compiled = ca
     return ca
+
+
+# ---------------------------------------------------------------------------
+# θ-parametric chain condensation: CompiledAIDG -> CondensedAIDG
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CondensedAIDG:
+    """Chain-condensed evaluation artifact (structure only, exact for every
+    θ with per-node work ≥ 1 — the floor every shipped evaluator enforces).
+
+    A maximal run of consecutive *single-node levels* is a chain: each
+    member's only timing-relevant input is the member one level up.  A
+    member is **absorbed** when (a) it touches no storage request slots
+    (the queueing fixed point needs materialized arrival times and base
+    fold-backs), (b) every non-direct predecessor edge is dominated by the
+    direct chain edge for all θ (``extra ≤ direct_extra + gap``, each chain
+    step contributing work ≥ 1), (c) its static ``base`` is dominated the
+    same way, and (d) it has at least one successor (so the makespan
+    survives on kept nodes).  An absorbed member's completion time is then
+    *exactly* ``t_anchor + Σ (edge extra + w_i(θ))`` over the absorbed
+    prefix — a dot product between the segment's 0/1 prefix-membership
+    vector and the θ-reweighted per-node work vector, evaluated inside the
+    trace as one ``cumsum`` (``op_class_counts`` exposes the aggregated
+    per-op-class count form of the same super-edges).  Everything a kept
+    node reads from an absorbed one is rewritten as a super-edge from the
+    segment anchor carrying (constant extra, prefix index).
+
+    Kept nodes keep the exact wavefront recurrence; the level schedule is
+    recomputed over the condensed DAG, so the sequential scan length drops
+    from the original critical depth to the condensed one (≥ 3x on
+    chain-dominated cells — see ``stats``).
+
+    ``boundary`` (optional): the last chain member with original id <
+    ``boundary`` is force-kept, so a max over kept nodes with id < boundary
+    equals the max over *all* nodes with id < boundary (the network
+    frontend's prologue reduction needs this).
+    """
+
+    aidg: AIDG
+    boundary: Optional[int]
+    n_kept: int
+    kept: np.ndarray           # (n_kept,) original ids, ascending
+    kept_rank: np.ndarray      # (n,) original id -> kept index, -1 = absorbed
+    absorbed: np.ndarray       # (n_ab,) original ids, segment-major order
+    ab_anchor: np.ndarray      # (n_ab,) kept index of the segment anchor
+    ab_const: np.ndarray       # (n_ab,) f32 — direct-step edge extra into it
+    ab_segstart: np.ndarray    # (n_ab,) int32 — segment's first position
+    # UNIT-level wavefront schedule: a unit is either one kept node or a
+    # maximal *affine chain* of kept nodes (single-node condensed levels
+    # whose only live input is the previous chain member — storage
+    # accessors included, their base still binds).  One scan step per unit
+    # level; each chain inside a window evaluates closed-form by the
+    # associative max-plus affine scan, so sequential depth is the number
+    # of unit levels, not chain length.
+    schedule: LevelSchedule    # over kept indices, unit-major renumbering
+    # level-major condensed predecessor slots (rows: permuted kept position
+    # + trailing width spill, like CompiledAIDG.preds_lv): source permuted
+    # position, constant extra, and the absorbed-prefix index (-1 = the
+    # source is kept, edge weight is just the constant).  Chain-coupled
+    # nodes carry NO slots — their single live input is the in-window
+    # affine coupling (v_const_lv / v_pidx_lv; the coupling weight at θ is
+    # const + prefix + own work).
+    preds_lv: np.ndarray       # (n_kept + W, P) int32
+    const_lv: np.ndarray       # (n_kept + W, P) f32
+    pidx_lv: np.ndarray        # (n_kept + W, P) int32
+    v_const_lv: np.ndarray     # (n_kept + W,) f32 — NEG = not coupled
+    v_pidx_lv: np.ndarray      # (n_kept + W,) int32 — -1 = no prefix
+    kept_perm: np.ndarray      # (n_kept,) original ids in permuted order
+    ab_anchor_perm: np.ndarray  # (n_ab,) permuted position of the anchor
+    stats: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def n(self) -> int:
+        """Original node count (the condensed evaluator still consumes and
+        reconstructs full-length work/base/t vectors)."""
+        return self.aidg.n
+
+    @property
+    def n_absorbed(self) -> int:
+        """Nodes folded into super-edges (``n - n_kept``)."""
+        return int(self.absorbed.shape[0])
+
+    def storage_scatter_kept(self, name: str) -> np.ndarray:
+        """Kept-index positions of one storage's access nodes (storage
+        accessors are never absorbed, so this is total)."""
+        return self.kept_rank[self.aidg.storage_nodes[name]].astype(np.int32)
+
+    def storage_static_order(self, name: str) -> bool:
+        """True when this storage's accesses are PROVABLY served in access
+        order for every θ: each access is a DAG ancestor of the next, so
+        ``arrival_{k+1} = t_{k+1} - w_{k+1} ≥ t_k + w_{k+1} - w_{k+1} =
+        arrival_k`` (work ≥ 1, extras ≥ 0 — holds on the hard and soft
+        paths alike).  A stable argsort of a statically-sorted key vector
+        is the identity, so the evaluator skips the per-candidate sort —
+        bit-identical results, no sort kernels."""
+        return bool(self.stats.get("static_order", {}).get(name, False))
+
+    def op_class_counts(self) -> np.ndarray:
+        """(n_segments, n_op_classes) per-op-class count vectors of the
+        condensed super-edges: row s counts, per op class, the absorbed
+        nodes of segment s — the ``counts ⋅ work(θ)`` view of the prefix
+        weights (the evaluator uses the per-node prefix cumsum, which is
+        the same dot product at per-node granularity)."""
+        if not self.absorbed.size:
+            return np.zeros((0, max(1, len(self.aidg.classes))), np.int64)
+        seg_id = np.cumsum(np.arange(len(self.absorbed))
+                           == self.ab_segstart)  # 1-based per segment
+        n_seg = int(seg_id[-1])
+        n_cls = max(1, len(self.aidg.classes))
+        out = np.zeros((n_seg, n_cls), np.int64)
+        np.add.at(out, (seg_id - 1, self.aidg.op_class[self.absorbed]), 1)
+        return out
+
+
+def _chain_absorb_flags(aidg: AIDG, sched: LevelSchedule,
+                        boundary: Optional[int]
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-node absorb decision plus the direct chain step (prev, extra).
+
+    Returns (absorb bool (n,), chain_prev int (n,), chain_extra f32 (n,)):
+    ``chain_prev[i]``/``chain_extra[i]`` are the single dominating direct
+    edge of an absorbed node (undefined elsewhere)."""
+    n = aidg.n
+    absorb = np.zeros(n, dtype=bool)
+    chain_prev = np.full(n, -1, dtype=np.int64)
+    chain_extra = np.zeros(n, dtype=np.float32)
+    if n == 0:
+        return absorb, chain_prev, chain_extra
+    depth = sched.depth
+    n_levels = sched.n_levels
+    counts = np.bincount(depth, minlength=n_levels)
+    first_at_level = sched.order[sched.starts]          # (n_levels,)
+    single = counts == 1
+    outdeg = np.zeros(n, dtype=np.int64)
+    real = aidg.preds >= 0
+    np.add.at(outdeg, aidg.preds[real], 1)
+    storage = np.zeros(n, dtype=bool)
+    for nodes in aidg.storage_nodes.values():
+        storage[nodes] = True
+    preds, extra = aidg.preds, aidg.pred_extra
+
+    d = 0
+    while d < n_levels:
+        if not single[d]:
+            d += 1
+            continue
+        d1 = d
+        while d1 + 1 < n_levels and single[d1 + 1]:
+            d1 += 1
+        # chain run over levels [d, d1]; the entry stays kept
+        for lv in range(d + 1, d1 + 1):
+            i = int(first_at_level[lv])
+            prev = int(first_at_level[lv - 1])
+            if storage[i] or outdeg[i] == 0:
+                continue
+            e_direct = None
+            ok = True
+            row, ex = preds[i], extra[i]
+            for k in range(row.shape[0]):
+                j = int(row[k])
+                if j < 0:
+                    break
+                if j == prev:
+                    e_direct = float(ex[k])
+            if e_direct is None:        # defensive: depth says it exists
+                continue
+            for k in range(row.shape[0]):
+                j = int(row[k])
+                if j < 0:
+                    break
+                if j == prev:
+                    continue
+                dj = int(depth[j])
+                # a side edge is dominated by the direct chain edge when its
+                # source is a shallower member of the SAME run and its extra
+                # cannot outrun the ≥ 1-cycle-per-step chain (work floor)
+                if not (d <= dj <= lv - 2) or int(first_at_level[dj]) != j:
+                    ok = False
+                    break
+                gap = (lv - 1) - dj
+                if float(ex[k]) > e_direct + gap + 1e-6:
+                    ok = False
+                    break
+            if ok and float(aidg.base[i]) > (float(aidg.base[prev]) + 1.0
+                                             + e_direct + 1e-6):
+                ok = False              # the static base could bind
+            if ok:
+                absorb[i] = True
+                chain_prev[i] = prev
+                chain_extra[i] = e_direct
+        # boundary: keep the deepest run member with original id < boundary
+        # so a prefix max over kept ids < boundary stays exact (prologue)
+        if boundary is not None:
+            q = -1
+            for lv in range(d, d1 + 1):
+                m = int(first_at_level[lv])
+                if m < boundary:
+                    q = m
+            if q >= 0:
+                absorb[q] = False
+        d = d1 + 1
+    return absorb, chain_prev, chain_extra
+
+
+def _storage_static_orders(aidg: AIDG) -> Dict[str, bool]:
+    """Per storage: is the arrival order provably static (each access a DAG
+    ancestor of the next)?  Ancestor sets via one bitset DP over the
+    forward CSR; cached on the AIDG (boundary-independent)."""
+    hit = aidg.stats.get("storage_static_order")
+    if hit is not None:
+        return hit
+    out: Dict[str, bool] = {}
+    if aidg.storage_nodes:
+        n = aidg.n
+        words = (n + 63) // 64
+        anc = np.zeros((n, words), np.uint64)
+        preds = aidg.preds
+        for i in range(n):
+            acc = anc[i]
+            for k in range(preds.shape[1]):
+                j = int(preds[i, k])
+                if j < 0:
+                    break
+                np.bitwise_or(acc, anc[j], out=acc)
+                acc[j >> 6] |= np.uint64(1 << (j & 63))
+        for st, nodes in aidg.storage_nodes.items():
+            ok = True
+            for k in range(len(nodes) - 1):
+                a, b = int(nodes[k]), int(nodes[k + 1])
+                if not (int(anc[b, a >> 6]) >> (a & 63)) & 1:
+                    ok = False
+                    break
+            out[st] = ok
+    aidg.stats["storage_static_order"] = out
+    return out
+
+
+def condense_aidg(aidg: AIDG, boundary: Optional[int] = None
+                  ) -> CondensedAIDG:
+    """AIDG -> CondensedAIDG (memoized per ``boundary`` on the AIDG):
+    collapse provably-linear chain interiors into θ-parametric super-edges
+    and recompute the level schedule over the kept nodes.  Exact on the
+    hard max-plus path for every θ (work floor ≥ 1); on the smooth τ path
+    absorbed steps use their exact sums, giving a *tighter* upper bound of
+    the hard result than the uncondensed soft wavefront."""
+    hit = aidg._condensed.get(boundary)
+    if hit is not None:
+        return hit
+    ca = compile_aidg(aidg)
+    sched0 = ca.schedule
+    n = aidg.n
+    absorb, chain_prev, chain_extra = _chain_absorb_flags(aidg, sched0,
+                                                          boundary)
+
+    kept = np.nonzero(~absorb)[0].astype(np.int64)
+    kept_rank = np.full(n, -1, dtype=np.int64)
+    kept_rank[kept] = np.arange(len(kept))
+
+    # absorbed nodes in segment-major order (each segment = a maximal
+    # absorbed stretch hanging off one kept anchor), with prefix bookkeeping
+    ab_list: List[int] = []
+    ab_anchor: List[int] = []
+    ab_const: List[float] = []
+    ab_segstart: List[int] = []
+    ab_pos = np.full(n, -1, dtype=np.int64)
+    order_by_depth = sched0.order  # absorbed nodes sit on single-node levels
+    for i in order_by_depth:
+        i = int(i)
+        if not absorb[i]:
+            continue
+        p = int(chain_prev[i])
+        pos = len(ab_list)
+        if absorb[p]:
+            anchor = ab_anchor[ab_pos[p]]
+            seg = ab_segstart[ab_pos[p]]
+        else:
+            anchor = int(kept_rank[p])
+            seg = pos
+        ab_list.append(i)
+        ab_anchor.append(anchor)
+        ab_const.append(float(chain_extra[i]))
+        ab_segstart.append(seg)
+        ab_pos[i] = pos
+
+    # condensed predecessor slots over kept nodes: edges from absorbed
+    # sources are rewritten to their segment anchor + prefix index
+    nk = len(kept)
+    deg = (aidg.preds[kept] >= 0).sum(axis=1) if nk else np.zeros(0, int)
+    p_used = max(1, int(deg.max())) if nk else 1
+    cpreds = np.full((nk, p_used), -1, dtype=np.int64)
+    cconst = np.zeros((nk, p_used), dtype=np.float32)
+    cpidx = np.full((nk, p_used), -1, dtype=np.int64)
+    for ki, i in enumerate(kept):
+        row, ex = aidg.preds[i], aidg.pred_extra[i]
+        slot = 0
+        for k in range(row.shape[0]):
+            j = int(row[k])
+            if j < 0:
+                break
+            if absorb[j]:
+                cpreds[ki, slot] = ab_anchor[ab_pos[j]]
+                cpidx[ki, slot] = ab_pos[j]
+            else:
+                cpreds[ki, slot] = kept_rank[j]
+            cconst[ki, slot] = float(ex[k])
+            slot += 1
+
+    ab_seg_arr = np.asarray(ab_segstart, dtype=np.int64)
+
+    # --- affine-chain coupling over the condensed DAG --------------------
+    # A kept node is *coupled* to one predecessor p when every one of its
+    # other live edges is provably dominated by the (i, p) edge for all θ:
+    # ``extra_k ≤ lb(direct) + D(src_k → p)`` with D the longest path in
+    # edges (each edge gains ≥ 1 cycle — work floor), or the side edge is
+    # a sub-prefix of the direct super-edge's own segment.  Unlike
+    # absorption, the node stays materialized (its base — and any storage
+    # fold-back into it — still binds), so storage accessors couple too;
+    # each maximal chain then evaluates closed-form by the associative
+    # affine scan — this is what collapses lane-parallel graphs (one chain
+    # per PE/unit), not just scalar in-order ones.
+    coupled = np.zeros(nk, dtype=bool)
+    v_const = np.full(nk, NEG, dtype=np.float32)
+    v_pidx = np.full(nk, -1, dtype=np.int64)
+    chain_prev_k = np.full(nk, -1, dtype=np.int64)
+    if nk:
+        # all-pairs longest path in edges over the condensed DAG (int16,
+        # -1 = unreachable); row i indexed by source
+        D = np.full((nk, nk), -1, dtype=np.int16)
+        for ki in range(nk):
+            acc = D[ki]
+            row = cpreds[ki]
+            for s in range(p_used):
+                j = int(row[s])
+                if j < 0:
+                    break
+                dj = D[j]
+                np.maximum(acc, dj + 1, out=acc, where=dj >= 0)
+                if acc[j] < 1:
+                    acc[j] = 1
+
+        def _seg_count(p):
+            return int(p - ab_seg_arr[p] + 1)
+
+        taken = np.zeros(nk, dtype=bool)   # p already continues a chain
+        for ki in range(nk):
+            slots = [(int(cpreds[ki, s]), float(cconst[ki, s]),
+                      int(cpidx[ki, s]))
+                     for s in range(p_used) if cpreds[ki, s] >= 0]
+            if not slots:
+                continue
+            # try direct candidates by descending static lower bound
+            cands = sorted(
+                ((cst + (_seg_count(px) if px >= 0 else 0), src, cst, px)
+                 for src, cst, px in slots if not taken[src]),
+                key=lambda c: -c[0])
+            for lb_d, p, const_d, p_d in cands:
+                ok = True
+                used_direct = False
+                for src, cst, px in slots:
+                    if (not used_direct and (src, cst, px)
+                            == (p, const_d, p_d)):
+                        used_direct = True
+                        continue
+                    if px < 0:
+                        gap = 0 if src == p else int(D[p][src])
+                        if (src != p and gap < 0) or cst > lb_d + gap + 1e-6:
+                            ok = False
+                            break
+                    elif (src == p and p_d >= 0
+                          and ab_seg_arr[px] == ab_seg_arr[p_d]
+                          and px <= p_d):
+                        # same-segment sub-prefix: the direct super-edge
+                        # walks through every step the side edge counts
+                        if cst > const_d + (p_d - px) + 1e-6:
+                            ok = False
+                            break
+                    else:
+                        ok = False
+                        break
+                if ok:
+                    coupled[ki] = True
+                    v_const[ki] = const_d
+                    v_pidx[ki] = p_d
+                    chain_prev_k[ki] = p
+                    taken[p] = True
+                    break
+        del D
+
+    # keep the chains only where they pay: the affine associative scan
+    # adds per-step kernels, so marginal level reductions (a systolic
+    # array's 87 -> 83) cost more than they save, while chain-dominated
+    # graphs (2683 -> 1) win enormously.  Rough per-step cost model with a
+    # fixed overhead term, measured on the CPU backend.
+    if nk and coupled.any():
+        unit_of_t = np.full(nk, -1, dtype=np.int64)
+        n_units_t = 0
+        for ki in range(nk):
+            if coupled[ki]:
+                unit_of_t[ki] = unit_of_t[chain_prev_k[ki]]
+            else:
+                unit_of_t[ki] = n_units_t
+                n_units_t += 1
+        udepth_t = np.zeros(n_units_t, dtype=np.int64)
+        for ki in range(nk):
+            if coupled[ki]:
+                continue
+            dmax = -1
+            for s in range(p_used):
+                j = int(cpreds[ki, s])
+                if j >= 0:
+                    dmax = max(dmax, int(udepth_t[unit_of_t[j]]))
+            udepth_t[unit_of_t[ki]] = dmax + 1
+        node_lv = udepth_t[unit_of_t]
+        wc = int(np.bincount(node_lv).max())
+        n_ulv_c = int(udepth_t.max()) + 1
+        deg_live = ((cpreds >= 0) & ~coupled[:, None]).sum(axis=1)
+        p_live = max(1, int(deg_live.max()))
+        pre = compute_level_schedule(cpreds.astype(np.int32), nk)
+        cost_chain = n_ulv_c * (512.0 + wc * (p_live + 3
+                                              + 2 * np.log2(max(2, wc))))
+        cost_plain = pre.n_levels * (256.0 + pre.width * (p_used + 3))
+        if cost_chain >= cost_plain:
+            coupled[:] = False
+            chain_prev_k[:] = -1
+            v_const[:] = NEG
+            v_pidx[:] = -1
+
+    # coupled nodes keep no slots — their one live input is the coupling
+    live = ~coupled[:, None] & (cpreds >= 0)
+    cpreds = np.where(live, cpreds, -1)
+    cconst = np.where(live, cconst, 0.0).astype(np.float32)
+    cpidx = np.where(live, cpidx, -1)
+    # repack slots left so trimming stays tight
+    if nk:
+        key = np.where(cpreds >= 0, 0, 1)
+        slot_order = np.argsort(key, axis=1, kind="stable")
+        rows_idx = np.arange(nk)[:, None]
+        cpreds = cpreds[rows_idx, slot_order]
+        cconst = cconst[rows_idx, slot_order]
+        cpidx = cpidx[rows_idx, slot_order]
+        deg_live = (cpreds >= 0).sum(axis=1)
+        p_used = max(1, int(deg_live.max()))
+        cpreds, cconst, cpidx = (cpreds[:, :p_used], cconst[:, :p_used],
+                                 cpidx[:, :p_used])
+
+    # --- unit DAG: chains as super-nodes, one scan step per unit level ---
+    # kept-index order is topological AND walks every chain head-to-tail
+    # (links ascend), so members land in chain order within their unit
+    unit_of = np.full(nk, -1, dtype=np.int64)
+    unit_members: List[List[int]] = []
+    for ki in range(nk):
+        if coupled[ki]:
+            unit_of[ki] = unit_of[chain_prev_k[ki]]
+            unit_members[unit_of[ki]].append(ki)
+        else:
+            unit_of[ki] = len(unit_members)
+            unit_members.append([ki])
+    udepth = np.zeros(len(unit_members), dtype=np.int64)
+    for u, members in enumerate(unit_members):   # entry pre-depth order
+        dmax = -1
+        for ki in members:
+            for s in range(p_used):
+                j = int(cpreds[ki, s])
+                if j >= 0:
+                    dmax = max(dmax, int(udepth[unit_of[j]]))
+        udepth[u] = dmax + 1
+
+    # level-major node ordering: units by (level, entry), members in chain
+    # order; windows therefore cover whole chains and the in-window affine
+    # coupling never crosses a window boundary
+    n_ulv = int(udepth.max()) + 1 if nk else 0
+    uorder = sorted(range(len(unit_members)),
+                    key=lambda u: (int(udepth[u]), unit_members[u][0]))
+    order = np.asarray([ki for u in uorder for ki in unit_members[u]],
+                       dtype=np.int64)
+    depth_nodes = np.asarray([int(udepth[unit_of[ki]]) for ki in order],
+                             dtype=np.int32)
+    rank = np.empty(nk, dtype=np.int32)
+    rank[order] = np.arange(nk, dtype=np.int32)
+    lv_counts = np.bincount(depth_nodes, minlength=max(1, n_ulv))
+    starts = np.zeros(max(1, n_ulv), dtype=np.int64)
+    np.cumsum(lv_counts[:-1], out=starts[1:])
+    width = int(lv_counts.max()) if nk else 0
+    level_nodes = np.full((n_ulv, max(1, width)), nk, dtype=np.int32)
+    if nk:
+        cols = np.arange(nk) - starts[depth_nodes]
+        level_nodes[depth_nodes, cols] = order
+    depth_full = np.zeros(nk, dtype=np.int32)
+    depth_full[order] = depth_nodes
+    csched = LevelSchedule(nk, depth_full, level_nodes,
+                           order.astype(np.int32), rank,
+                           starts[:n_ulv].astype(np.int32))
+
+    w = csched.width
+    perm_preds = cpreds[order] if nk else cpreds
+    mapped = np.where(perm_preds >= 0,
+                      rank[np.maximum(perm_preds, 0)], -1)
+    preds_lv = np.concatenate(
+        [mapped, np.full((w, p_used), -1, dtype=np.int64)],
+        axis=0).astype(np.int32)
+    const_lv = np.concatenate(
+        [cconst[order] if nk else cconst,
+         np.zeros((w, p_used), dtype=np.float32)], axis=0)
+    pidx_lv = np.concatenate(
+        [cpidx[order] if nk else cpidx,
+         np.full((w, p_used), -1, dtype=np.int64)],
+        axis=0).astype(np.int32)
+    v_const_lv = np.concatenate(
+        [v_const[order] if nk else v_const,
+         np.full((w,), NEG, dtype=np.float32)])
+    v_pidx_lv = np.concatenate(
+        [v_pidx[order] if nk else v_pidx,
+         np.full((w,), -1, dtype=np.int64)]).astype(np.int32)
+
+    ab_anchor_arr = np.asarray(ab_anchor, dtype=np.int64)
+    cond = CondensedAIDG(
+        aidg=aidg, boundary=boundary, n_kept=nk, kept=kept,
+        kept_rank=kept_rank,
+        absorbed=np.asarray(ab_list, dtype=np.int64),
+        ab_anchor=ab_anchor_arr,
+        ab_const=np.asarray(ab_const, dtype=np.float32),
+        ab_segstart=ab_seg_arr,
+        schedule=csched, preds_lv=preds_lv, const_lv=const_lv,
+        pidx_lv=pidx_lv, v_const_lv=v_const_lv, v_pidx_lv=v_pidx_lv,
+        kept_perm=kept[order] if nk else kept,
+        ab_anchor_perm=(rank[ab_anchor_arr].astype(np.int64)
+                        if len(ab_list) else ab_anchor_arr),
+        stats={"n": n, "n_kept": nk, "n_absorbed": len(ab_list),
+               "n_coupled": int(coupled.sum()),
+               "units": len(unit_members),
+               "levels": sched0.n_levels, "levels_condensed": csched.n_levels,
+               "level_reduction": sched0.n_levels / max(1, csched.n_levels),
+               "static_order": _storage_static_orders(aidg)})
+    aidg._condensed[boundary] = cond
+    return cond
 
 
 def longest_path(aidg: AIDG, work: Optional[np.ndarray] = None,

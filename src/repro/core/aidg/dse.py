@@ -34,13 +34,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .builder import AIDG, CompiledAIDG, compile_aidg, longest_path_fixed_point
-from .maxplus import (DEFAULT_ENGINE, fixed_point_jax, fixed_point_soft,
-                      softmax_reduce, softmaximum)
+from .builder import (AIDG, CompiledAIDG, CondensedAIDG, compile_aidg,
+                      condense_aidg, longest_path_fixed_point)
+from .maxplus import (DEFAULT_ENGINE, NEG, condensed_scan, fixed_point_jax,
+                      fixed_point_soft, softmax_reduce, softmaximum)
 
 __all__ = ["DSEProblem", "make_problem", "evaluate_theta", "compiled_sweep",
            "sweep", "evaluate_theta_soft", "grad_sweep", "LayerStack",
-           "NETWORK_MODES", "compiled_network_sweep", "grad_network_sweep"]
+           "NETWORK_MODES", "compiled_network_sweep", "grad_network_sweep",
+           "PackSpec", "PackedMatrix"]
 
 
 @dataclass
@@ -162,8 +164,9 @@ def sweep(prob: DSEProblem, thetas_op: np.ndarray, thetas_st: np.ndarray,
     compiled kernel is reused rather than re-traced per remainder shape).
 
     ``engine``: the DAG relaxation used inside the fixed point —
-    ``"wavefront"`` (default, level-scheduled), ``"scan"`` (per-node), or
-    ``"blocked"`` (max-plus closure blocks).
+    ``"wavefront"`` (default, level-scheduled), ``"condensed"``
+    (chain-condensed wavefront, see ``builder.condense_aidg``), ``"scan"``
+    (per-node), or ``"blocked"`` (max-plus closure blocks).
     """
     if chunk is not None and chunk <= 0:
         raise ValueError(f"chunk must be positive, got {chunk}")
@@ -199,19 +202,21 @@ def sweep(prob: DSEProblem, thetas_op: np.ndarray, thetas_st: np.ndarray,
 
 
 def evaluate_theta_soft(prob: DSEProblem, theta_op: jnp.ndarray,
-                        theta_st: jnp.ndarray, tau, n_iters: int = 2
-                        ) -> jnp.ndarray:
+                        theta_st: jnp.ndarray, tau, n_iters: int = 2,
+                        engine: str = DEFAULT_ENGINE) -> jnp.ndarray:
     """Smooth estimated cycles for one parameter point: the τ-tempered
     counterpart of ``evaluate_theta`` (soft occupancy floor, soft wavefront
     fixed point, soft makespan reduction).  Upper-bounds the hard estimate
     and converges to it as τ → 0; smooth in (θ_op, θ_st) everywhere — the
     hard ``max(1, fu + mem)`` floor would have zero gradient wherever θ has
     pushed a node under it, killing descent directions exactly where fast
-    hardware stops paying, so the floor is softened too."""
+    hardware stops paying, so the floor is softened too.  ``engine``:
+    ``"wavefront"`` (default) or ``"condensed"`` (exact chain sums on a
+    shorter sequential scan — a tighter soft relaxation)."""
     work, st_lat, _ = _reweight(prob, theta_op, theta_st,
                                 floor=lambda a, b: softmaximum(a, b, tau))
     t = fixed_point_soft(prob.compiled_aidg, tau=tau, n_iters=n_iters,
-                         work=work, storage_lat=st_lat)
+                         work=work, storage_lat=st_lat, engine=engine)
     return softmax_reduce(t, tau)
 
 
@@ -416,3 +421,601 @@ def grad_network_sweep(stack: LayerStack, projections: Sequence[Tuple],
         fn = jax.jit(jax.vmap(jax.value_and_grad(f), in_axes=(0, None)))
         stack._compiled[key] = fn
     return fn
+
+
+# ---------------------------------------------------------------------------
+# matrix packing: ALL cells x ALL candidates in one traced dispatch
+# ---------------------------------------------------------------------------
+
+_BIG = 1e18
+
+
+@dataclass(frozen=True)
+class PackSpec:
+    """One cell's contribution to a :class:`PackedMatrix`: its (unique)
+    per-layer problems + projections and the max-plus composition arrays.
+    An operator cell is the trivial spec — one problem, one run of one
+    repetition, no overlap gates; a network cell mirrors its
+    :class:`LayerStack` (``fits_*`` all-zero encodes sequential mode, so
+    one composition formula serves both modes)."""
+
+    problems: Tuple[DSEProblem, ...]
+    projections: Tuple[Tuple[np.ndarray, np.ndarray], ...]
+    prologue_len: np.ndarray     # (L,) int — per-problem load-only prefix
+    run_layer: np.ndarray        # (R,) int — local problem index per run
+    run_reps: np.ndarray         # (R,) float
+    fits_within: np.ndarray      # (R,) float 0/1 (0 = no overlap credited)
+    fits_between: np.ndarray     # (R-1,) float 0/1
+
+    @staticmethod
+    def operator(problem: DSEProblem, projection) -> "PackSpec":
+        """The single-problem spec of an operator cell."""
+        return PackSpec((problem,), (tuple(projection),),
+                        np.zeros(1, np.int64), np.zeros(1, np.int64),
+                        np.ones(1, np.float32), np.zeros(1, np.float32),
+                        np.zeros(0, np.float32))
+
+
+@dataclass
+class _PackedRow:
+    """Per-unique-problem numpy staging arrays (permuted kept space)."""
+
+    problem: DSEProblem
+    cond: CondensedAIDG
+    fu: np.ndarray               # (nk,) raw FU latency, permuted kept order
+    mem: np.ndarray              # (nk,) raw memory latency
+    base: np.ndarray             # (nk,) static base
+    opk: np.ndarray              # (nk,) knob id scaling fu (K = identity)
+    stk: np.ndarray              # (nk,) knob id scaling mem
+    prol: np.ndarray             # (nk,) bool — original id < prologue_len
+    ab_fu: np.ndarray            # (n_ab,) absorbed-node raw FU latency
+    ab_opk: np.ndarray           # (n_ab,) knob id scaling it
+    # storages as (perm positions, lats, knob, slots, ordered) — slots == 1
+    # solves closed-form, > 1 runs the slot-vector scan; ``ordered`` means
+    # the arrival order is PROVABLY static (each access an ancestor of the
+    # next), so the per-candidate argsort is the identity and is skipped
+    queues: List[Tuple[np.ndarray, np.ndarray, int, int, bool]]
+
+
+def _stage_row(prob: DSEProblem, proj, k_prologue: int) -> _PackedRow:
+    """Condense one problem (prologue boundary force-kept) and gather its
+    θ-independent arrays into the permuted kept layout."""
+    a = prob.aidg
+    cond = condense_aidg(a, boundary=int(k_prologue) if k_prologue else None)
+    op_idx, st_idx = (np.asarray(proj[0], np.int64),
+                      np.asarray(proj[1], np.int64))
+    kop = cond.kept_perm                          # original ids, permuted
+    stk_full = np.full(a.n, -1, dtype=np.int64)   # -1 -> identity (patched)
+    for st, cid in prob.node_storage.items():
+        stk_full[a.storage_nodes[st]] = st_idx[cid]
+    queues: List[Tuple[np.ndarray, np.ndarray, int, int, bool]] = []
+    ca = prob.compiled_aidg
+    for name in ca.storage_order:
+        perm_pos = cond.schedule.rank[
+            cond.kept_rank[a.storage_nodes[name]]].astype(np.int64)
+        lat = np.asarray(a.storage_lat[name], np.float32)
+        knob = int(st_idx[prob.node_storage[name]])
+        slots = int(a.storage_slots[name])
+        queues.append((perm_pos, lat, knob, slots,
+                       cond.storage_static_order(name)))
+    return _PackedRow(
+        problem=prob, cond=cond,
+        fu=a.fu_lat[kop].astype(np.float32),
+        mem=a.mem_lat[kop].astype(np.float32),
+        base=a.base[kop].astype(np.float32),
+        opk=op_idx[a.op_class[kop]],
+        stk=stk_full[kop],
+        prol=(kop < k_prologue),
+        ab_fu=a.fu_lat[cond.absorbed].astype(np.float32),
+        ab_opk=op_idx[a.op_class[cond.absorbed]],
+        queues=queues)
+
+
+class PackedMatrix:
+    """The whole scenario/network matrix as ONE traced evaluator.
+
+    Every unique (condensed) per-layer problem across all cells becomes one
+    *row*: its level windows, predecessor slots, absorbed-prefix tables,
+    and storage queues are padded to shared shapes and evaluated by a
+    ``vmap`` over rows inside a ``vmap`` over candidates — all cells x all
+    candidates in a single jitted dispatch, with masking keeping padded
+    rows/slots/accesses inert.  Rows are grouped into *shape buckets*
+    (``_bucketize``) so a width-1 chain cell never pays a wide systolic
+    cell's window; every bucket's vmapped scan lives in the same trace, so
+    it is still one dispatch per batch.  Cells then compose their rows'
+    makespans
+    (and prologue times, for pipelined network cells) with the same
+    run-length max-plus formula as :class:`LayerStack` — a tile program
+    shared by several networks is evaluated once per candidate, not once
+    per cell.
+
+    Built by :meth:`build` from cell :class:`PackSpec`s;
+    ``repro.core.aidg.explorer.Explorer`` (``engine="packed"``, the
+    default) routes ``evaluate`` / coordinate descent / the gradient
+    engine through it.
+    """
+
+    def __init__(self, rows: List[_PackedRow], specs: List[PackSpec],
+                 row_of: List[List[int]], n_knobs: int, n_iters: int):
+        self.rows = rows
+        self.specs = specs
+        self.row_of = row_of          # per cell: global row id per problem
+        self.n_knobs = n_knobs
+        self.n_iters = n_iters
+        self._arrays = None           # lazily-built jnp constant pytree
+        self._buckets: Optional[List[List[int]]] = None
+        self._compiled: Dict[Tuple, Callable] = {}
+
+    # -- construction -------------------------------------------------------
+
+    @staticmethod
+    def build(specs: Sequence[PackSpec], n_knobs: int,
+              n_iters: int = 2) -> "PackedMatrix":
+        """Dedup problems across cells (by object identity — the scenario
+        cache already shares repeated tile programs), condense each exactly
+        once with its prologue boundary, and stage the packed arrays."""
+        by_id: Dict[int, int] = {}
+        staged: List[Tuple[DSEProblem, Tuple, int]] = []
+        row_of: List[List[int]] = []
+        for spec in specs:
+            ids = []
+            for prob, proj, k in zip(spec.problems, spec.projections,
+                                     spec.prologue_len):
+                rid = by_id.get(id(prob))
+                if rid is None:
+                    rid = len(staged)
+                    by_id[id(prob)] = rid
+                    staged.append([prob, proj, int(k)])
+                else:
+                    staged[rid][2] = max(staged[rid][2], int(k))
+                ids.append(rid)
+            row_of.append(ids)
+        rows = [_stage_row(prob, proj, k) for prob, proj, k in staged]
+        return PackedMatrix(rows, list(specs), row_of, n_knobs, n_iters)
+
+    @property
+    def n_rows(self) -> int:
+        """Unique packed problems (the vmap-over-cells extent)."""
+        return len(self.rows)
+
+    @property
+    def n_cells(self) -> int:
+        """Matrix cells composed from the packed rows."""
+        return len(self.specs)
+
+    def stats(self) -> Dict[str, float]:
+        """Aggregate packing/condensation statistics (for benchmarks and
+        docs): total vs kept nodes, original vs condensed level totals,
+        shape-bucket count, and the padded sequential scan total (one scan
+        per bucket, all in one dispatch)."""
+        conds = [r.cond for r in self.rows]
+        lv0 = sum(c.stats["levels"] for c in conds)
+        lv1 = sum(c.stats["levels_condensed"] for c in conds)
+        buckets = self._bucketize()
+        scan = sum(max(conds[i].schedule.n_levels for i in b)
+                   for b in buckets)
+        return {"rows": self.n_rows, "cells": self.n_cells,
+                "nodes": sum(c.n for c in conds),
+                "kept": sum(c.n_kept for c in conds),
+                "levels": lv0, "levels_condensed": lv1,
+                "level_reduction": lv0 / max(1, lv1),
+                "buckets": len(buckets), "scan_len": scan}
+
+    # -- packed constant arrays --------------------------------------------
+
+    def _bucketize(self) -> List[List[int]]:
+        """Group rows into shape buckets so padding waste stays bounded:
+        the vmapped wavefront pads every bucket member to the bucket's
+        (levels, width, preds) maxima, so a single global bucket would make
+        every small cell pay the largest cell's scan — measured 20x+ WORSE
+        than the per-cell loop on the default matrix.  Greedy assignment in
+        descending per-row cost, joining a bucket only when the added
+        padded work stays within 1.5x the row's own work.  All buckets
+        still evaluate inside ONE jitted function (one dispatch).
+        Memoized — ``stats`` and ``_build_arrays`` share one assignment."""
+        if self._buckets is not None:
+            return self._buckets
+        rows = self.rows
+
+        def qlen(i):   # sequential multi-slot queue steps (per iteration)
+            return max((len(nd) for nd, _, _, sl, _ in rows[i].queues
+                        if sl > 1), default=0)
+
+        def rcost(i):
+            c = rows[i].cond
+            return (max(1, c.schedule.n_levels) * max(1, c.schedule.width)
+                    * max(1, c.preds_lv.shape[1])
+                    + self.n_iters * qlen(i) * 8)
+
+        def bcost(members):
+            lv = max(rows[i].cond.schedule.n_levels for i in members)
+            w = max(rows[i].cond.schedule.width for i in members)
+            p = max(rows[i].cond.preds_lv.shape[1] for i in members)
+            q = self.n_iters * max(qlen(i) for i in members)
+            return (len(members)
+                    * (max(1, lv) * max(1, w) * max(1, p) + q * 8))
+
+        order = sorted(range(len(rows)), key=lambda i: (-rcost(i), i))
+        buckets: List[List[int]] = []
+        # rows with affine chains never share a bucket with chain-free rows
+        # (the in-window associative scan is a trace-time constant per
+        # bucket, and it costs real per-step kernels)
+        chainy = [rows[i].cond.stats["n_coupled"] > 0
+                  for i in range(len(rows))]
+        for i in order:
+            best, best_delta = None, None
+            for b in buckets:
+                if chainy[b[0]] != chainy[i]:
+                    continue
+                delta = bcost(b + [i]) - bcost(b)
+                if best_delta is None or delta < best_delta:
+                    best, best_delta = b, delta
+            if best is not None and best_delta <= 1.5 * rcost(i):
+                best.append(i)
+            else:
+                buckets.append([i])
+        self._buckets = buckets
+        return buckets
+
+    def _bucket_arrays(self, members: List[int]):
+        """Stage one bucket's stacked jnp constants (dims = bucket maxima)."""
+        rows = [self.rows[i] for i in members]
+        K = self.n_knobs
+        NK = max(r.cond.n_kept for r in rows)
+        W = max(r.cond.schedule.width for r in rows)
+        P = max(r.cond.preds_lv.shape[1] for r in rows)
+        LV = max(r.cond.schedule.n_levels for r in rows)
+        AB = max(1, max(r.cond.n_absorbed for r in rows))
+        R = len(rows)
+
+        fu = np.zeros((R, NK), np.float32)
+        mem = np.zeros((R, NK), np.float32)
+        base = np.full((R, NK), NEG, np.float32)
+        opk = np.full((R, NK), K, np.int64)
+        stk = np.full((R, NK), K, np.int64)
+        nmask = np.zeros((R, NK), bool)
+        prol = np.zeros((R, NK), bool)
+        has_prol = np.zeros((R,), np.float32)
+        preds = np.full((R, NK + W, P), -1, np.int32)
+        const = np.zeros((R, NK + W, P), np.float32)
+        pidx = np.full((R, NK + W, P), -1, np.int32)
+        vc = np.full((R, NK + W), NEG, np.float32)
+        vp = np.full((R, NK + W), -1, np.int32)
+        starts = np.full((R, LV), NK, np.int32)
+        ab_fu = np.zeros((R, AB), np.float32)
+        ab_opk = np.full((R, AB), K, np.int64)
+        ab_const = np.zeros((R, AB), np.float32)
+        ab_seg = np.tile(np.arange(AB, dtype=np.int64), (R, 1))
+
+        for i, r in enumerate(rows):
+            c = r.cond
+            nk, w, p = c.n_kept, c.schedule.width, c.preds_lv.shape[1]
+            fu[i, :nk] = r.fu
+            mem[i, :nk] = r.mem
+            base[i, :nk] = r.base
+            opk[i, :nk] = r.opk
+            stk[i, :nk] = np.where(r.stk >= 0, r.stk, K)
+            nmask[i, :nk] = True
+            prol[i, :nk] = r.prol
+            has_prol[i] = float(r.prol.any())
+            preds[i, : nk + w, :p] = c.preds_lv
+            const[i, : nk + w, :p] = c.const_lv
+            pidx[i, : nk + w, :p] = c.pidx_lv
+            vc[i, : nk + w] = c.v_const_lv
+            vp[i, : nk + w] = c.v_pidx_lv
+            starts[i, : c.schedule.n_levels] = c.schedule.starts
+            na = c.n_absorbed
+            if na:
+                ab_fu[i, :na] = r.ab_fu
+                ab_opk[i, :na] = r.ab_opk
+                ab_const[i, :na] = c.ab_const
+                ab_seg[i, :na] = c.ab_segstart
+
+        # storage queues in four families — (single-slot | multi-slot) x
+        # (statically-ordered | dynamic) — padded over (row, storage,
+        # access); ordered families skip the per-candidate argsort
+        def select(r, single, ordered):
+            return [(nd, lat, kn, sl) for nd, lat, kn, sl, o in r.queues
+                    if (sl == 1) == single and o == ordered]
+
+        J = jnp.asarray
+        groups = {}
+        for key, single, ordered in (("s1o", True, True),
+                                     ("s1d", True, False),
+                                     ("smo", False, True),
+                                     ("smd", False, False)):
+            sel = [select(r, single, ordered) for r in rows]
+            NS = max(1, max(len(s) for s in sel))
+            SA = max(1, max((len(nd) for s in sel for nd, _, _, _ in s),
+                            default=1))
+            SL = max(1, max((sl for s in sel for _, _, _, sl in s),
+                            default=1))
+            g_nd = np.full((R, NS, SA), -1, np.int64)
+            g_lat = np.zeros((R, NS, SA), np.float32)
+            g_kn = np.full((R, NS), K, np.int64)
+            g_sl = np.ones((R, NS), np.int32)
+            present = False
+            for i, s in enumerate(sel):
+                for si, (nd, lat, kn, sl) in enumerate(s):
+                    g_nd[i, si, : len(nd)] = nd
+                    g_lat[i, si, : len(nd)] = lat
+                    g_kn[i, si] = kn
+                    g_sl[i, si] = sl
+                    present = True
+            groups[key] = dict(nd=J(g_nd), lat=J(g_lat), kn=J(g_kn),
+                               sl=J(g_sl), SL=SL, present=present)
+
+        return dict(
+            NK=NK, W=W, P=P, LV=LV, AB=AB,
+            has_chains=any(r.cond.stats["n_coupled"] > 0 for r in rows),
+            fu=J(fu), mem=J(mem), base=J(base), opk=J(opk), stk=J(stk),
+            nmask=J(nmask), prol=J(prol), has_prol=J(has_prol),
+            preds=J(preds), const=J(const), pidx=J(pidx), vc=J(vc), vp=J(vp),
+            starts=J(starts),
+            ab_fu=J(ab_fu), ab_opk=J(ab_opk), ab_const=J(ab_const),
+            ab_seg=J(ab_seg), queues=groups)
+
+    def _build_arrays(self):
+        if self._arrays is not None:
+            return self._arrays
+        buckets = self._bucketize()
+        bucket_arrays = [self._bucket_arrays(b) for b in buckets]
+        # inverse permutation: concatenated bucket outputs -> global row ids
+        flat = [i for b in buckets for i in b]
+        inv = np.empty(len(flat), np.int64)
+        inv[flat] = np.arange(len(flat))
+
+        # composition arrays over cells (global row ids)
+        CL = len(self.specs)
+        RU = max(1, max(len(s.run_layer) for s in self.specs))
+        runs = np.zeros((CL, RU), np.int64)
+        reps = np.zeros((CL, RU), np.float32)
+        fw = np.zeros((CL, RU), np.float32)
+        fb = np.zeros((CL, max(1, RU - 1)), np.float32)
+        for ci, spec in enumerate(self.specs):
+            nr = len(spec.run_layer)
+            runs[ci, :nr] = np.asarray(self.row_of[ci])[spec.run_layer]
+            reps[ci, :nr] = spec.run_reps
+            fw[ci, :nr] = spec.fits_within
+            if nr > 1:
+                fb[ci, : nr - 1] = spec.fits_between
+
+        J = jnp.asarray
+        self._arrays = dict(
+            buckets=bucket_arrays, inv=J(inv), RU=RU,
+            runs=J(runs), reps=J(reps), fw=J(fw), fb=J(fb))
+        return self._arrays
+
+    # -- the traced evaluator ----------------------------------------------
+
+    _ROW_KEYS = ("fu", "mem", "base", "opk", "stk", "nmask", "prol",
+                 "has_prol", "preds", "const", "pidx", "vc", "vp", "starts",
+                 "ab_fu", "ab_opk", "ab_const", "ab_seg")
+
+    def _row_fn(self, A, soft: bool):
+        """One packed row's fixed point: (row-array dict, kn, tau) ->
+        (makespan, prologue completion).  Python-level ``soft`` selects the
+        hard max family or the τ-tempered LSE family at trace time; the
+        queue families' static attributes (slot width, ordered-ness,
+        presence) specialize the trace per bucket."""
+        NK, W = A["NK"], A["W"]
+        n_iters = self.n_iters
+        qstatic = [(key, g["SL"], key.startswith("s1"), key.endswith("o"))
+                   for key, g in A["queues"].items() if g["present"]]
+
+        def fn(args, kn, tau):
+            (fu, mem, base0, opk, stk, nmask, prol, has_prol, preds, const,
+             pidx, vc, vp, starts, ab_fu, ab_opk, ab_const, ab_seg) = (
+                args[k] for k in self._ROW_KEYS)
+            if soft:
+                floor = lambda x: softmaximum(jnp.float32(1.0), x, tau)
+                reduce2 = lambda a, b: softmaximum(a, b, tau)
+            else:
+                floor = lambda x: jnp.maximum(jnp.float32(1.0), x)
+                reduce2 = jnp.maximum
+            w = floor(fu * kn[opk] + mem * kn[stk])
+            aw = floor(ab_fu * kn[ab_opk]) + ab_const
+            tot0 = jnp.concatenate([jnp.zeros((1,), jnp.float32),
+                                    jnp.cumsum(aw)])
+            prefix = tot0[1:] - tot0[ab_seg]
+            extra = const + jnp.where(pidx >= 0,
+                                      prefix[jnp.maximum(pidx, 0)], 0.0)
+            w_pad = jnp.concatenate([w, jnp.zeros((W,), jnp.float32)])
+            v_lv = jnp.where(
+                vc > NEG / 2,
+                vc + jnp.where(vp >= 0, prefix[jnp.maximum(vp, 0)], 0.0)
+                + w_pad, NEG)
+
+            def relax(b):
+                return condensed_scan(w, b, extra, v_lv, preds, starts,
+                                      tau=tau if soft else None,
+                                      has_chains=A["has_chains"])
+
+            def q_single(ordered):
+                def q(nd0, lat0, knob, t):
+                    msk = nd0 >= 0
+                    nd = jnp.maximum(nd0, 0)
+                    lat = lat0 * kn[knob]
+                    arr = jnp.where(msk, t[nd] - w[nd], _BIG)
+                    if ordered:   # provably static order: argsort = id
+                        arr_s, lat_s = arr, lat
+                    else:
+                        o = jnp.argsort(arr)
+                        arr_s, lat_s = arr[o], lat[o]
+                    S = jnp.cumsum(lat_s)
+                    z = arr_s - S + lat_s
+                    if soft:
+                        done_s = S + tau * jax.lax.cumlogsumexp(z / tau)
+                    else:
+                        done_s = S + jax.lax.cummax(z)
+                    if ordered:
+                        done = done_s
+                    else:   # inverse permutation by scatter, not a 2nd sort
+                        inv = (jnp.zeros_like(o).at[o]
+                               .set(jnp.arange(o.shape[0])))
+                        done = done_s[inv]
+                    need = jnp.where(msk, done + fu[nd] - w[nd], NEG)
+                    return jnp.where(msk, nd, NK), need
+                return q
+
+            def q_multi(ordered, SL):
+                def q(nd0, lat0, knob, slots, t):
+                    msk = nd0 >= 0
+                    nd = jnp.maximum(nd0, 0)
+                    lat = lat0 * kn[knob]
+                    arr = jnp.where(msk, t[nd] - w[nd], _BIG)
+                    if ordered:
+                        arr_s, lat_s = arr, lat
+                    else:
+                        o = jnp.argsort(arr)
+                        arr_s, lat_s = arr[o], lat[o]
+
+                    def step(free, inp):
+                        a, l = inp
+                        k = jnp.argmin(free)   # earliest-free slot
+                        done = reduce2(a, free[k]) + l
+                        return free.at[k].set(done), done
+
+                    free0 = jnp.where(jnp.arange(SL) < slots, 0.0, _BIG)
+                    _, done_s = jax.lax.scan(step, free0, (arr_s, lat_s))
+                    if ordered:
+                        done = done_s
+                    else:
+                        inv = (jnp.zeros_like(o).at[o]
+                               .set(jnp.arange(o.shape[0])))
+                        done = done_s[inv]
+                    need = jnp.where(msk, done + fu[nd] - w[nd], NEG)
+                    return jnp.where(msk, nd, NK), need
+                return q
+
+            t = relax(base0)
+            for _ in range(n_iters):
+                need_full = jnp.full((NK + 1,), NEG, jnp.float32)
+                for key, SL, single, ordered in qstatic:
+                    qa = args["queues"][key]
+                    if single:
+                        nd_g, need_g = jax.vmap(
+                            q_single(ordered), in_axes=(0, 0, 0, None))(
+                            qa["nd"], qa["lat"], qa["kn"], t)
+                    else:
+                        nd_g, need_g = jax.vmap(
+                            q_multi(ordered, SL),
+                            in_axes=(0, 0, 0, 0, None))(
+                            qa["nd"], qa["lat"], qa["kn"], qa["sl"], t)
+                    need_full = need_full.at[nd_g.reshape(-1)].max(
+                        need_g.reshape(-1))
+                if soft:
+                    b = softmaximum(base0, need_full[:NK], tau)
+                else:
+                    b = jnp.maximum(base0, need_full[:NK])
+                t = relax(b)
+
+            tm = jnp.where(nmask, t, NEG)
+            tp = jnp.where(prol, t, NEG)
+            if soft:
+                m = softmax_reduce(tm, tau)
+                p = softmax_reduce(tp, tau)
+            else:
+                m = tm.max()
+                p = tp.max()
+            return m, jnp.where(has_prol > 0, p, 0.0)
+
+        return fn
+
+    def _matrix_fn(self, soft: bool):
+        """knobs (K,) [, tau] -> per-cell cycles (S,), fully traced: one
+        vmapped wavefront fixed point per shape bucket (all inside the one
+        trace), bucket outputs re-ordered to global rows, then the
+        run-length composition per cell."""
+        A = self._build_arrays()
+
+        def bucket_args(BA):
+            d = {k: BA[k] for k in self._ROW_KEYS}
+            d["queues"] = {key: {f: g[f] for f in ("nd", "lat", "kn", "sl")}
+                           for key, g in BA["queues"].items()
+                           if g["present"]}
+            return d
+
+        per_bucket = [(self._row_fn(BA, soft), bucket_args(BA))
+                      for BA in A["buckets"]]
+        inv = A["inv"]
+        runs, reps, fw, fb = A["runs"], A["reps"], A["fw"], A["fb"]
+        RU = A["RU"]
+
+        def fn(knobs, tau):
+            kn = jnp.concatenate([knobs.astype(jnp.float32),
+                                  jnp.ones((1,), jnp.float32)])
+            ms, ps = [], []
+            for row_fn, row_args in per_bucket:
+                m_b, p_b = jax.vmap(row_fn, in_axes=(0, None, None))(
+                    row_args, kn, tau)
+                ms.append(m_b)
+                ps.append(p_b)
+            m = jnp.concatenate(ms)[inv]
+            p = jnp.concatenate(ps)[inv]
+            mr, pr = m[runs], p[runs]
+            clip = ((lambda a, b: -softmaximum(-a, -b, tau)) if soft
+                    else jnp.minimum)
+            total = (reps * mr).sum(axis=-1)
+            within = ((reps - 1.0) * clip(pr, mr) * fw).sum(axis=-1)
+            if RU > 1:
+                between = (clip(pr[:, 1:], mr[:, :-1]) * fb).sum(axis=-1)
+            else:
+                between = 0.0
+            return total - within - between
+
+        return fn
+
+    # -- public evaluation surface -----------------------------------------
+
+    def evaluate_fn(self) -> Callable:
+        """Cached ``jit(vmap)`` hard evaluator:
+        ``fn(knobs (B, K)) -> (B, S) cycles`` — the whole matrix in one
+        dispatch."""
+        fn = self._compiled.get("hard")
+        if fn is None:
+            f = self._matrix_fn(soft=False)
+            fn = jax.jit(jax.vmap(lambda k: f(k, jnp.float32(1.0))))
+            self._compiled["hard"] = fn
+        return fn
+
+    def evaluate(self, knob_thetas: np.ndarray,
+                 chunk: Optional[int] = None) -> np.ndarray:
+        """(B, n_knobs) candidates -> (B, S) estimated cycles.  ``chunk``
+        bounds peak memory; the tail chunk is padded to the compiled batch
+        shape (no per-remainder re-trace)."""
+        fn = self.evaluate_fn()
+        kt = jnp.asarray(np.atleast_2d(np.asarray(knob_thetas, np.float32)))
+        B = kt.shape[0]
+        if chunk is None or B <= chunk:
+            return np.asarray(fn(kt))
+        out = np.empty((B, self.n_cells), dtype=np.float32)
+        for s in range(0, B, chunk):
+            e = min(s + chunk, B)
+            if e - s < chunk:
+                pad = chunk - (e - s)
+                ck = jnp.concatenate(
+                    [kt[s:e], jnp.ones((pad, kt.shape[1]), jnp.float32)])
+                out[s:e] = np.asarray(fn(ck))[: e - s]
+            else:
+                out[s:e] = np.asarray(fn(kt[s:e]))
+        return out
+
+    def grad_fn(self, baselines: np.ndarray) -> Callable:
+        """Cached ``jit(vmap(value_and_grad))`` over the soft family:
+        ``fn(knobs (B, K), tau) -> (mean normalized latency (B,),
+        d latency / d knob (B, K))`` — the whole matrix's end-to-end
+        gradient in one dispatch (τ traced, annealing never re-traces)."""
+        key = ("grad", np.asarray(baselines, np.float64).tobytes())
+        fn = self._compiled.get(key)
+        if fn is None:
+            f = self._matrix_fn(soft=True)
+            bl = jnp.asarray(baselines, jnp.float32)
+
+            def val(knobs, tau):
+                return (f(knobs, tau) / bl).mean()
+
+            fn = jax.jit(jax.vmap(jax.value_and_grad(val),
+                                  in_axes=(0, None)))
+            self._compiled[key] = fn
+        return fn

@@ -56,14 +56,20 @@ import numpy as np
 
 from ..acadl.sim import build_trace, simulate
 from .builder import (AIDG, CompiledAIDG, LevelSchedule, build_aidg,
-                      longest_path_fixed_point)
-from .dse import DSEProblem, make_problem, sweep
+                      condense_aidg, longest_path_fixed_point)
+from .dse import DSEProblem, PackSpec, PackedMatrix, make_problem, sweep
 from .maxplus import DEFAULT_ENGINE, ENGINES
+
+# the Explorer's engine knob: every per-cell max-plus relaxation, plus the
+# matrix-packed single-dispatch evaluator (the default)
+EXPLORER_ENGINES = ENGINES + ("packed",)
+DEFAULT_EXPLORER_ENGINE = "packed"
 
 __all__ = [
     "Scenario", "CompiledScenario", "default_scenarios", "compile_scenario",
     "clear_scenario_cache", "scenario_cache_stats", "Knob", "DesignSpace",
-    "DEFAULT_SPACE", "grid_candidates", "random_candidates", "pareto_front",
+    "DEFAULT_SPACE", "EXPLORER_ENGINES", "DEFAULT_EXPLORER_ENGINE",
+    "grid_candidates", "random_candidates", "pareto_front",
     "Explorer", "ExplorationResult",
 ]
 
@@ -278,6 +284,11 @@ class CompiledScenario:
         op_idx, st_idx = proj
         return grad_sweep(self.problem, op_idx, st_idx, n_iters=n_iters)
 
+    def pack_spec(self, proj) -> PackSpec:
+        """This cell's :class:`repro.core.aidg.dse.PackSpec` — a single
+        problem, one run of one repetition, no overlap gates."""
+        return PackSpec.operator(self.problem, proj)
+
     def simulate(self) -> int:
         """Cycle-accurate oracle: rebuild the AG from scratch (the builder's
         functional pre-execution mutates memory) and run the event
@@ -286,11 +297,16 @@ class CompiledScenario:
         return simulate(ag, prog).cycles
 
     def stats_row(self) -> Dict[str, float]:
-        """Level-schedule statistics: node count vs critical depth."""
+        """Level-schedule statistics: node count vs critical depth, plus
+        the chain-condensed depth (``condense_aidg``) the packed engine
+        scans instead."""
         s = self.schedule
+        c = condense_aidg(self.aidg).stats
         return {"name": self.name, "n": s.n, "levels": s.n_levels,
                 "max_width": s.width,
-                "parallelism": round(s.parallelism, 2)}
+                "parallelism": round(s.parallelism, 2),
+                "kept": c["n_kept"],
+                "levels_condensed": c["levels_condensed"]}
 
 
 _AIDG_CACHE: Dict[Tuple, CompiledScenario] = {}
@@ -518,13 +534,19 @@ class Explorer:
 
     Compiles every scenario once (AIDG cache + level schedule), projects
     shared knob vectors to per-scenario θ, and evaluates candidate batches
-    with one cached jit(vmap) sweep per scenario — thousands of (arch,
-    workload, θ) cells per call, no graph rebuilds, no retracing.
+    in batched jitted sweeps — thousands of (arch, workload, θ) cells per
+    call, no graph rebuilds, no retracing.
 
-    ``engine`` selects the max-plus relaxation inside every sweep:
-    ``"wavefront"`` (default — a ``lax.scan`` over topological levels,
-    sequential depth = the DAG's critical depth), ``"scan"`` (one step per
-    node), or ``"blocked"`` (max-plus Kleene-closure blocks).
+    ``engine`` selects the evaluator.  ``"packed"`` (the default) runs the
+    whole matrix through one :class:`repro.core.aidg.dse.PackedMatrix`
+    dispatch: every cell chain-condensed (``builder.condense_aidg``),
+    padded to shared shapes, and evaluated cells x candidates in a single
+    traced ``vmap`` x ``vmap`` — no per-cell Python loop, no per-cell
+    dispatch.  The per-cell engines remain available for reference and
+    benchmarking: ``"wavefront"`` (a ``lax.scan`` over topological levels
+    per cell), ``"condensed"`` (per-cell wavefront over the condensed
+    schedule), ``"scan"`` (one step per node), and ``"blocked"`` (max-plus
+    Kleene-closure blocks).
 
     ``networks=True`` appends the whole-network matrix
     (``repro.core.network.default_network_scenarios``); a sequence of
@@ -538,14 +560,16 @@ class Explorer:
 
     def __init__(self, scenarios: Optional[Sequence[Scenario]] = None,
                  space: DesignSpace = DEFAULT_SPACE, n_iters: int = 2,
-                 use_cache: bool = True, engine: str = DEFAULT_ENGINE,
+                 use_cache: bool = True,
+                 engine: str = DEFAULT_EXPLORER_ENGINE,
                  networks=False):
-        if engine not in ENGINES:
+        if engine not in EXPLORER_ENGINES:
             raise ValueError(f"unknown engine {engine!r}; "
-                             f"choose from {ENGINES}")
+                             f"choose from {EXPLORER_ENGINES}")
         self.space = space
         self.n_iters = n_iters
         self.engine = engine
+        self._packed: Optional[PackedMatrix] = None
         cells = list(default_scenarios() if scenarios is None else scenarios)
         if networks:
             from ..network import default_network_scenarios
@@ -615,13 +639,27 @@ class Explorer:
 
     # -- batched evaluation -------------------------------------------------
 
+    def packed_matrix(self) -> PackedMatrix:
+        """The matrix-packed single-dispatch evaluator over all cells
+        (built lazily from every cell's ``pack_spec``; cached)."""
+        if self._packed is None:
+            specs = [cs.pack_spec(proj) for cs, proj
+                     in zip(self.compiled, self._projections)]
+            self._packed = PackedMatrix.build(specs, self.space.n,
+                                              n_iters=self.n_iters)
+        return self._packed
+
     def evaluate(self, knob_thetas: np.ndarray,
                  chunk: Optional[int] = None) -> np.ndarray:
-        """(B, n_knobs) candidates -> (B, S) estimated cycles.  One batched
-        sweep per scenario over cached AIDGs and cached compiled kernels."""
+        """(B, n_knobs) candidates -> (B, S) estimated cycles.  With the
+        default ``engine="packed"``, the WHOLE matrix x batch is one
+        jitted dispatch; per-cell engines fall back to one batched sweep
+        per scenario over cached compiled kernels."""
         kt = np.asarray(knob_thetas, np.float32)
         if kt.ndim == 1:
             kt = kt[None, :]
+        if self.engine == "packed":
+            return self.packed_matrix().evaluate(kt, chunk=chunk)
         cols = [cs.evaluate(self.space, kt, proj, n_iters=self.n_iters,
                             chunk=chunk, engine=self.engine)
                 for cs, proj in zip(self.compiled, self._projections)]

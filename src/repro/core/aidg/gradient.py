@@ -9,7 +9,10 @@ makes the gradient first-class:
 * the objective is evaluated through ``dse.grad_sweep`` — one cached
   ``jit(vmap(value_and_grad))`` per scenario, gradients landing directly on
   the shared knobs (the ``DesignSpace.projection`` chain is traced), on the
-  temperature-τ smooth family of ``maxplus.fixed_point_soft``;
+  temperature-τ smooth family of ``maxplus.fixed_point_soft`` — or, when
+  the explorer runs the matrix-packed engine (the default), through ONE
+  ``dse.PackedMatrix.grad_fn`` dispatch differentiating every cell at
+  once;
 * the area proxy  cost(θ) = Σ_k w_k / θ_k  is differentiated analytically
   alongside (``d cost/d θ_k = -w_k / θ_k²``);
 * ``GradientExplorer.refine`` runs **batched multi-start projected Adam**
@@ -80,13 +83,22 @@ class GradientExplorer:
         self.explorer = explorer
         self.objective = objective
         self.space = explorer.space
-        # one cached jit(vmap(value_and_grad)) per cell, built through the
-        # cell protocol so operator cells and whole-network cells both
-        # contribute their d(cycles)/d(knob) — end-to-end for networks
-        self._fns = [cs.grad_fn(proj, n_iters=explorer.n_iters)
-                     for cs, proj
-                     in zip(explorer.compiled, explorer._projections)]
         self._baselines = np.asarray(explorer.baselines, np.float64)
+        if explorer.engine == "packed":
+            # ONE cached jit(vmap(value_and_grad)) for the whole matrix:
+            # the packed soft evaluator differentiates every cell (operator
+            # and end-to-end network compositions alike) in one dispatch
+            self._packed_fn = explorer.packed_matrix().grad_fn(
+                self._baselines)
+            self._fns = None
+        else:
+            # one cached jit(vmap(value_and_grad)) per cell, built through
+            # the cell protocol so operator cells and whole-network cells
+            # both contribute their d(cycles)/d(knob)
+            self._packed_fn = None
+            self._fns = [cs.grad_fn(proj, n_iters=explorer.n_iters)
+                         for cs, proj
+                         in zip(explorer.compiled, explorer._projections)]
         self._weights = explorer.knob_weights().astype(np.float64)
         self._log_lo = np.log([k.lo for k in self.space.knobs])
         self._log_hi = np.log([k.hi for k in self.space.knobs])
@@ -99,16 +111,21 @@ class GradientExplorer:
         temperature τ.  Latency and its gradient come from the per-scenario
         compiled kernels; the cost factor enters analytically."""
         kt = jnp.asarray(np.atleast_2d(knob_thetas), jnp.float32)
-        M = kt.shape[0]
-        lat = np.zeros(M, np.float64)
-        dlat = np.zeros((M, self.space.n), np.float64)
-        for fn, b in zip(self._fns, self._baselines):
-            v, g = fn(kt, jnp.float32(tau))
-            lat += np.asarray(v, np.float64) / b
-            dlat += np.asarray(g, np.float64) / b
-        S = len(self._fns)
-        lat /= S
-        dlat /= S
+        if self._packed_fn is not None:
+            v, g = self._packed_fn(kt, jnp.float32(tau))
+            lat = np.asarray(v, np.float64)
+            dlat = np.asarray(g, np.float64)
+        else:
+            M = kt.shape[0]
+            lat = np.zeros(M, np.float64)
+            dlat = np.zeros((M, self.space.n), np.float64)
+            for fn, b in zip(self._fns, self._baselines):
+                v, g = fn(kt, jnp.float32(tau))
+                lat += np.asarray(v, np.float64) / b
+                dlat += np.asarray(g, np.float64) / b
+            S = len(self._fns)
+            lat /= S
+            dlat /= S
         obj = np.log(lat)
         grad = dlat / lat[:, None]
         if self.objective == "product":

@@ -52,7 +52,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .builder import AIDG, CompiledAIDG, compile_aidg
+from .builder import AIDG, CompiledAIDG, CondensedAIDG, NEG, compile_aidg, \
+    condense_aidg
 
 __all__ = [
     "ENGINES",
@@ -60,6 +61,9 @@ __all__ = [
     "longest_path_wavefront",
     "longest_path_scan",
     "longest_path_blocked",
+    "longest_path_condensed",
+    "condensed_prefix",
+    "condensed_scan",
     "slot_queue_scan",
     "fixed_point_jax",
     "fixed_point_batch",
@@ -72,9 +76,11 @@ __all__ = [
     "fixed_point_soft",
 ]
 
-NEG = -1e18
+# NEG (the max-plus -inf sentinel) is defined once in builder and
+# re-exported here — condense_aidg writes it into coupling tables that the
+# evaluators compare against, so there must be exactly one definition
 
-ENGINES = ("wavefront", "scan", "blocked")
+ENGINES = ("wavefront", "scan", "blocked", "condensed")
 DEFAULT_ENGINE = "wavefront"
 
 AIDGLike = Union[AIDG, CompiledAIDG]
@@ -171,6 +177,133 @@ def longest_path_wavefront(aidg: AIDGLike,
     return _wavefront_impl(a.n, s.width, w, b, jnp.asarray(ca.preds_lv),
                            jnp.asarray(ca.extra_lv), jnp.asarray(s.starts),
                            jnp.asarray(s.order), jnp.asarray(s.rank))
+
+
+# ---------------------------------------------------------------------------
+# condensed wavefront evaluation (chain super-edges, sequential depth =
+# the CONDENSED critical depth)
+# ---------------------------------------------------------------------------
+
+
+def condensed_prefix(cond: CondensedAIDG, w: jnp.ndarray) -> jnp.ndarray:
+    """(n_ab,) inclusive prefix weights of every absorbed node: the exact
+    θ-reweighted super-edge dot product ``Σ_prefix (edge extra + w_i)``,
+    one ``cumsum`` + two gathers (segment boundaries are static)."""
+    aw = w[jnp.asarray(cond.absorbed)] + jnp.asarray(cond.ab_const)
+    tot0 = jnp.concatenate([jnp.zeros((1,), aw.dtype), jnp.cumsum(aw)])
+    pos = jnp.arange(cond.n_absorbed)
+    return tot0[pos + 1] - tot0[jnp.asarray(cond.ab_segstart)]
+
+
+def condensed_scan(w_perm: jnp.ndarray, b_perm: jnp.ndarray,
+                   extra_lv: jnp.ndarray, v_lv: jnp.ndarray,
+                   preds_lv: jnp.ndarray, starts: jnp.ndarray,
+                   tau=None, has_chains: bool = True) -> jnp.ndarray:
+    """The condensed wavefront: one ``lax.scan`` step per UNIT level.  Each
+    step gathers the (already-final) cross-unit predecessor times, reduces
+    with the window's base, and then resolves every affine chain inside
+    the window closed-form with one ``associative_scan`` of the max-plus
+    affine composition
+
+        (v₁, h₁) ∘ (v₂, h₂) = (v₁ + v₂, max(h₁ + v₂, h₂))
+
+    (the τ-soft family composes under the SAME operator with
+    ``softmaximum`` — smooth chains stay one associative scan).  ``v_lv``
+    is the per-permuted-slot coupling weight (NEG = chain break), already
+    including the target's own work; everything is in the level-major
+    permuted layout of ``builder.condense_aidg``.  ``has_chains=False``
+    (a trace-time constant) skips the affine scan entirely for graphs
+    with no coupled nodes — the step then reduces to the plain wavefront."""
+    NK = w_perm.shape[0]
+    W = preds_lv.shape[0] - NK
+    P = preds_lv.shape[1]
+    work_pad = jnp.concatenate([w_perm, jnp.zeros((W,), jnp.float32)])
+    base_pad = jnp.concatenate([b_perm, jnp.full((W,), NEG, jnp.float32)])
+
+    def op(a, c):
+        va, ha = a
+        vb, hb = c
+        if tau is None:
+            h = jnp.maximum(ha + vb, hb)
+        else:
+            h = softmaximum(ha + vb, hb, tau)
+        return jnp.maximum(va + vb, NEG), h
+
+    def step(t, start):
+        js = jax.lax.dynamic_slice(preds_lv, (start, 0), (W, P))
+        ex = jax.lax.dynamic_slice(extra_lv, (start, 0), (W, P))
+        wv = jax.lax.dynamic_slice(work_pad, (start,), (W,))
+        bv = jax.lax.dynamic_slice(base_pad, (start,), (W,))
+        vv = jax.lax.dynamic_slice(v_lv, (start,), (W,))
+        vals = jnp.where(js >= 0, t[jnp.maximum(js, 0)] + ex, NEG)
+        # compose the reductions instead of concatenating (LSE composes
+        # exactly: lse(b, v₁..v_k) = lse(b, lse(v)) — and the fused
+        # gather→where→reduce chain avoids materializing a (W, P+1) buffer)
+        if tau is None:
+            r = jnp.maximum(bv, vals.max(axis=1))
+        else:
+            r = softmaximum(bv, softmax_reduce(vals, tau, axis=1), tau)
+        if has_chains:
+            _, tw = jax.lax.associative_scan(op, (vv, r + wv))
+        else:
+            tw = r + wv
+        return jax.lax.dynamic_update_slice(t, tw, (start,)), ()
+
+    t0 = jnp.zeros((NK + W,), dtype=jnp.float32)
+    t, _ = jax.lax.scan(step, t0, starts)
+    return t[:NK]
+
+
+def _condensed_relax(cond: CondensedAIDG, w: jnp.ndarray, b: jnp.ndarray,
+                     tau=None) -> jnp.ndarray:
+    """Condensed relaxation returning the FULL (n,) completion-time vector:
+    kept nodes via the unit-level (soft) wavefront with in-window affine
+    chains, absorbed nodes reconstructed as anchor + exact prefix sum.
+    ``tau`` None = hard max; a traced scalar = the smooth LSE family
+    (absorbed steps and chain couplings keep their exact sums — a tighter
+    relaxation than softening every per-node max)."""
+    kept_perm = jnp.asarray(cond.kept_perm)
+    wk = w[kept_perm].astype(jnp.float32)
+    bk = b[kept_perm].astype(jnp.float32)
+    W = cond.schedule.width
+    vc = jnp.asarray(cond.v_const_lv)
+    coupled = vc > NEG / 2
+    w_pad = jnp.concatenate([wk, jnp.zeros((W,), jnp.float32)])
+    if cond.n_absorbed:
+        prefix = condensed_prefix(cond, w.astype(jnp.float32))
+        pidx = jnp.asarray(cond.pidx_lv)
+        extra = (jnp.asarray(cond.const_lv)
+                 + jnp.where(pidx >= 0, prefix[jnp.maximum(pidx, 0)], 0.0))
+        vp = jnp.asarray(cond.v_pidx_lv)
+        vpre = jnp.where(vp >= 0, prefix[jnp.maximum(vp, 0)], 0.0)
+    else:
+        extra = jnp.asarray(cond.const_lv)
+        vpre = 0.0
+    v_lv = jnp.where(coupled, vc + vpre + w_pad, NEG)
+    tk = condensed_scan(wk, bk, extra, v_lv, jnp.asarray(cond.preds_lv),
+                        jnp.asarray(cond.schedule.starts), tau=tau,
+                        has_chains=cond.stats["n_coupled"] > 0)
+    t = jnp.zeros((cond.n,), jnp.float32).at[kept_perm].set(tk)
+    if cond.n_absorbed:
+        t = t.at[jnp.asarray(cond.absorbed)].set(
+            tk[jnp.asarray(cond.ab_anchor_perm)] + prefix)
+    return t
+
+
+def longest_path_condensed(aidg: AIDGLike,
+                           work: Optional[jnp.ndarray] = None,
+                           base: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Exact longest path in ``levels_condensed`` sequential device steps:
+    chain interiors are folded into θ-parametric super-edges
+    (``builder.condense_aidg``), so chain-dominated graphs lose most of
+    their sequential scan length.  Identical to ``longest_path_wavefront``
+    for any work vector with the ≥ 1-cycle floor (all shipped evaluators)."""
+    ca = _as_compiled(aidg)
+    a = ca.aidg
+    cond = condense_aidg(a)
+    w = jnp.asarray(a.work if work is None else work, jnp.float32)
+    b = jnp.asarray(a.base if base is None else base, jnp.float32)
+    return _condensed_relax(cond, w, b)
 
 
 # ---------------------------------------------------------------------------
@@ -330,6 +463,9 @@ def _relaxer(ca: CompiledAIDG, engine: str, block: int = 128
         fs, fd, fw = jnp.asarray(fs), jnp.asarray(fd), jnp.asarray(fw)
         return lambda w, b: _blocked_core(a.n, block, Dd, Ds, fs, fd, fw,
                                           w, b)
+    if engine == "condensed":
+        cond = condense_aidg(a)
+        return lambda w, b: _condensed_relax(cond, w, b)
     raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
 
 
@@ -465,25 +601,34 @@ def slot_queue_soft(arrival: jnp.ndarray, lat: jnp.ndarray, slots: int,
 def fixed_point_soft(aidg: AIDGLike, tau: float = 0.05, n_iters: int = 3,
                      work: Optional[jnp.ndarray] = None,
                      base: Optional[jnp.ndarray] = None,
-                     storage_lat: Optional[Dict[str, jnp.ndarray]] = None
-                     ) -> jnp.ndarray:
+                     storage_lat: Optional[Dict[str, jnp.ndarray]] = None,
+                     engine: str = DEFAULT_ENGINE) -> jnp.ndarray:
     """``fixed_point_jax`` over the smooth family: soft wavefront
     relaxations between queueing folds, ``slot_queue_soft`` inside them, and
     a ``softmaximum`` base fold-back.  The arrival-order ``argsort`` is
     piecewise-constant in θ (its subgradient contribution is zero almost
     everywhere), so treating it as a constant gather keeps the whole fixed
-    point ``jax.grad``-safe."""
+    point ``jax.grad``-safe.  ``engine``: ``"wavefront"`` (default) or
+    ``"condensed"`` (chain super-edges keep their exact sums — a tighter
+    soft relaxation on a shorter sequential scan)."""
     ca = _as_compiled(aidg)
     a = ca.aidg
     tau = jnp.asarray(tau, jnp.float32)
     w = jnp.asarray(a.work if work is None else work, jnp.float32)
     b0 = jnp.asarray(a.base if base is None else base, jnp.float32)
-    s = ca.schedule
-    pl, el = jnp.asarray(ca.preds_lv), jnp.asarray(ca.extra_lv)
-    st_, od, rk = (jnp.asarray(s.starts), jnp.asarray(s.order),
-                   jnp.asarray(s.rank))
-    relax = lambda w_, b_: _wavefront_soft_impl(a.n, s.width, tau, w_, b_,
-                                                pl, el, st_, od, rk)
+    if engine == "condensed":
+        cond = condense_aidg(a)
+        relax = lambda w_, b_: _condensed_relax(cond, w_, b_, tau=tau)
+    elif engine == "wavefront":
+        s = ca.schedule
+        pl, el = jnp.asarray(ca.preds_lv), jnp.asarray(ca.extra_lv)
+        st_, od, rk = (jnp.asarray(s.starts), jnp.asarray(s.order),
+                       jnp.asarray(s.rank))
+        relax = lambda w_, b_: _wavefront_soft_impl(a.n, s.width, tau, w_,
+                                                    b_, pl, el, st_, od, rk)
+    else:
+        raise ValueError(f"fixed_point_soft supports engines 'wavefront' "
+                         f"and 'condensed', got {engine!r}")
     queue = lambda arr, lat, slots: slot_queue_soft(arr, lat, slots, tau)
 
     def fold(b, nd, need):

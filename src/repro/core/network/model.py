@@ -28,8 +28,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ...configs import get_config
-from ..aidg.dse import (LayerStack, NETWORK_MODES, compiled_network_sweep,
-                        grad_network_sweep)
+from ..aidg.dse import (LayerStack, NETWORK_MODES, PackSpec,
+                        compiled_network_sweep, grad_network_sweep)
 from ..aidg.explorer import (CompiledScenario, DesignSpace,
                              compile_scenario)
 from ..aidg.maxplus import DEFAULT_ENGINE
@@ -243,6 +243,27 @@ class CompiledNetwork:
         return grad_network_sweep(self.stack, proj, n_iters=n_iters,
                                   mode=self.scenario.mode)
 
+    def pack_spec(self, proj) -> PackSpec:
+        """This cell's :class:`repro.core.aidg.dse.PackSpec`: the stack's
+        unique tile problems plus its run-length composition arrays.
+        Sequential cells zero the overlap gates (one composition formula
+        serves both modes); pipelined cells keep them, and the prologue
+        boundary is passed through so condensation force-keeps the last
+        chain node of every load-only prefix."""
+        seq = self.scenario.mode == "sequential"
+        st = self.stack
+        nr = len(st.run_layer)
+        return PackSpec(
+            problems=tuple(st.problems),
+            projections=tuple(tuple(p) for p in proj),
+            prologue_len=np.asarray(st.prologue_len, np.int64),
+            run_layer=np.asarray(st.run_layer, np.int64),
+            run_reps=np.asarray(st.run_reps, np.float32),
+            fits_within=(np.zeros(nr, np.float32) if seq
+                         else np.asarray(st.fits_within, np.float32)),
+            fits_between=(np.zeros(max(0, nr - 1), np.float32) if seq
+                          else np.asarray(st.fits_between, np.float32)))
+
     def simulate(self) -> float:
         """Event-simulator oracle, composed the same way the estimate is:
         simulate each unique tile program once, then apply the sequential
@@ -253,12 +274,17 @@ class CompiledNetwork:
         return self._sim_cache
 
     def stats_row(self) -> Dict[str, float]:
-        """Aggregate level-schedule statistics over unique tile programs."""
+        """Aggregate level-schedule statistics over unique tile programs
+        (including the chain-condensed depths the packed engine scans)."""
         n = sum(c.schedule.n for c in self.cells)
         levels = sum(c.schedule.n_levels for c in self.cells)
+        rows = [c.stats_row() for c in self.cells]
         return {"name": self.name, "n": n, "levels": levels,
                 "max_width": max(c.schedule.width for c in self.cells),
-                "parallelism": round(n / max(1, levels), 2)}
+                "parallelism": round(n / max(1, levels), 2),
+                "kept": sum(r["kept"] for r in rows),
+                "levels_condensed": sum(r["levels_condensed"]
+                                        for r in rows)}
 
 
 def default_network_scenarios(networks: Optional[Sequence[str]] = None,

@@ -4,7 +4,33 @@ device; only the dry-run (repro.launch.dryrun) forces 512 host devices."""
 import numpy as np
 import pytest
 
+try:
+    # the autouse cache-stats reset below is function-scoped; hypothesis's
+    # health check would otherwise flag it on every @given test.  Resetting
+    # once per test (not per example) is exactly the intended semantics —
+    # the counters are only read by tests that generate their own traffic.
+    from hypothesis import HealthCheck, settings as _hsettings
+    _hsettings.register_profile(
+        "repro", suppress_health_check=[HealthCheck.function_scoped_fixture])
+    _hsettings.load_profile("repro")
+except ImportError:          # hypothesis is a dev-only dependency
+    pass
+
 
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _isolate_scenario_cache_stats():
+    """Zero the process-wide AIDG-cache hit/miss counters before every
+    test (the cache CONTENTS are kept — clearing compiled scenarios would
+    slow the suite enormously and tests that need a cold cache call
+    ``clear_scenario_cache`` themselves).  Without this, any test reading
+    ``scenario_cache_stats`` sees counts leaked from whichever tests
+    happened to run earlier — order-dependent flakiness."""
+    from repro.core.aidg import explorer
+    explorer._CACHE_STATS["hits"] = 0
+    explorer._CACHE_STATS["misses"] = 0
+    yield

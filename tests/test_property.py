@@ -14,7 +14,9 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.acadl.storage import SetAssociativeCache
 from repro.core.aidg import build_aidg, longest_path
-from repro.core.aidg.explorer import pareto_front
+from repro.core.aidg.dse import evaluate_theta, evaluate_theta_soft, sweep
+from repro.core.aidg.explorer import (compile_scenario, default_scenarios,
+                                      pareto_front)
 from repro.core.acadl.sim import build_trace
 from repro.core.archs import make_gamma_ag
 from repro.core.mapping.gemm import gamma_gemm, init_gemm_memory
@@ -101,6 +103,61 @@ def test_aidg_monotone_in_work(s1, s2):
     t1 = longest_path(aidg, work=aidg.work * np.float32(s1)).max()
     t2 = longest_path(aidg, work=aidg.work * np.float32(max(s1, s2))).max()
     assert t2 >= t1 - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# chain condensation ≡ uncondensed wavefront (repro.core.aidg.builder)
+# ---------------------------------------------------------------------------
+
+_DEFAULT_SCENARIOS = default_scenarios()
+_SCN_IDS = [s.name for s in _DEFAULT_SCENARIOS]
+
+
+def _theta_draw(prob, seed):
+    rng = np.random.default_rng(seed)
+    to = np.exp(rng.uniform(np.log(0.25), np.log(4.0),
+                            prob.n_op)).astype(np.float32)
+    ts = np.exp(rng.uniform(np.log(0.25), np.log(4.0),
+                            prob.n_st)).astype(np.float32)
+    return to, ts
+
+
+@pytest.mark.parametrize("scenario", _DEFAULT_SCENARIOS, ids=_SCN_IDS)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_condensed_equals_wavefront_for_random_theta(scenario, seed):
+    """``condense_aidg`` is exact for EVERY θ on the hard path: the
+    condensed engine's cycles match the uncondensed wavefront across
+    log-uniform θ draws, on every default cell (compiled kernels are
+    cached, so each draw is one cheap evaluation)."""
+    prob = compile_scenario(scenario).problem
+    to, ts = _theta_draw(prob, seed)
+    wf = sweep(prob, to[None], ts[None], engine="wavefront")[0]
+    cd = sweep(prob, to[None], ts[None], engine="condensed")[0]
+    assert abs(wf - cd) <= 0.5 + 1e-4 * abs(wf), (scenario.name, wf, cd)
+
+
+@pytest.mark.parametrize("tau", [0.05, 0.01])
+@pytest.mark.parametrize(
+    "scenario",
+    [s for s in _DEFAULT_SCENARIOS
+     if s.name in ("oma/gemm", "gamma/gemm", "tpu_v5e/gemm")],
+    ids=lambda s: s.name if hasattr(s, "name") else s)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=4, deadline=None)
+def test_condensed_soft_bounds_for_random_theta(scenario, tau, seed):
+    """On the τ-soft path the condensed evaluator (exact chain sums) stays
+    between the hard result and the uncondensed soft upper bound, for
+    random θ — the gradient engine descends a consistent surface."""
+    prob = compile_scenario(scenario).problem
+    to, ts = _theta_draw(prob, seed)
+    to_j, ts_j = jnp.asarray(to), jnp.asarray(ts)
+    hard = float(evaluate_theta(prob, to_j, ts_j))
+    s_wf = float(evaluate_theta_soft(prob, to_j, ts_j, tau))
+    s_cd = float(evaluate_theta_soft(prob, to_j, ts_j, tau,
+                                     engine="condensed"))
+    assert s_cd >= hard * (1 - 1e-3) - 1e-2, (scenario.name, s_cd, hard)
+    assert s_cd <= s_wf * (1 + 1e-3) + 1e-2, (scenario.name, s_cd, s_wf)
 
 
 # ---------------------------------------------------------------------------

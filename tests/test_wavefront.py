@@ -94,7 +94,13 @@ def test_unknown_engine_raises():
     aidg = compile_scenario(SCENARIOS[2]).aidg
     with pytest.raises(ValueError, match="engine"):
         fixed_point_jax(aidg, engine="nope")
-    assert set(ENGINES) == {"wavefront", "scan", "blocked"}
+    assert set(ENGINES) == {"wavefront", "scan", "blocked", "condensed"}
+    # the Explorer additionally accepts the matrix-packed evaluator (its
+    # default), which is not a per-cell fixed-point engine
+    from repro.core.aidg.explorer import (DEFAULT_EXPLORER_ENGINE,
+                                          EXPLORER_ENGINES)
+    assert set(EXPLORER_ENGINES) == set(ENGINES) | {"packed"}
+    assert DEFAULT_EXPLORER_ENGINE == "packed"
 
 
 # ---------------------------------------------------------------------------
