@@ -1,0 +1,156 @@
+"""Recorded-baseline regression guard for the bench trajectory.
+
+``benchmarks/run.py --json`` records each section's rows as
+``BENCH_<section>.json`` (full budget) / ``BENCH_<section>_<budget>.json``
+(other budgets).  This module ratio-compares a LIVE bench run against the
+checked-in snapshot so serving-path slowdowns fail CI loudly instead of
+drifting: for every guarded row, the live throughput metric must be at
+least ``tolerance`` x the recorded one (default 0.5 — an injected 2x
+slowdown breaches).
+
+Budget matching: throughput at different budgets is structurally
+different (a 64-candidate smoke batch amortizes dispatch overhead far
+less than the 1024-candidate full run — measured ~0.47x on ``dse/packed``),
+so the guard prefers the budget-matched snapshot and, when only the
+full-budget snapshot exists, scales the tolerance by
+``CROSS_BUDGET_FACTOR`` so the comparison stays meaningful without going
+blind.
+
+Environment knobs (CI wiring):
+
+* ``BENCH_BASELINE_TOL``   — override the tolerance (default 0.5).
+* ``BENCH_BASELINE_GUARD`` — ``1`` forces the guard on any budget,
+  ``0`` disables it (default: enabled exactly for the small-budget smoke
+  run, the CI tier; full-budget runs RECORD baselines rather than check
+  them).
+
+The comparator itself is unit-tested on synthetic snapshots (missing
+row, within-tolerance, breach) in ``tests/test_bench_guard.py`` — the
+guard is verified, not just wired.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import sys
+from typing import Dict, List, Optional, Sequence
+
+from .run import parse_derived
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# extra tolerance headroom when only a differently-budgeted snapshot is
+# available (see module docstring for the measured cross-budget ratio)
+CROSS_BUDGET_FACTOR = 0.5
+
+# the serving-path rows bench-smoke guards, and the throughput metric
+GUARDED_ROWS = ("dse/packed", "network/matrix")
+GUARD_METRIC = "configs_per_s"
+
+
+def snapshot_path(section: str, budget: str = "full",
+                  out_dir: Optional[str] = None) -> pathlib.Path:
+    """Snapshot file for (section, budget): ``BENCH_<section>.json`` for
+    the full budget, ``BENCH_<section>_<budget>.json`` otherwise."""
+    base = pathlib.Path(out_dir) if out_dir else REPO_ROOT
+    suffix = "" if budget in ("full", "", None) else f"_{budget}"
+    return base / f"BENCH_{section}{suffix}.json"
+
+
+def load_baseline(section: str, budget: str = "full",
+                  out_dir: Optional[str] = None) -> Optional[Dict]:
+    """The recorded snapshot for (section, budget), preferring the
+    budget-matched file and falling back to the full-budget one;
+    ``None`` when neither exists."""
+    for b in (budget, "full"):
+        path = snapshot_path(section, b, out_dir)
+        if path.exists():
+            with open(path) as fh:
+                return json.load(fh)
+    return None
+
+
+def check_rows(live_rows: Sequence[Dict], baseline: Dict,
+               names: Sequence[str] = GUARDED_ROWS,
+               metric: str = GUARD_METRIC,
+               tolerance: float = 0.5) -> List[str]:
+    """Ratio-compare live rows against a snapshot; returns the list of
+    problems (empty = guard passes).
+
+    For each guarded ``name``: the row must exist on BOTH sides, carry a
+    numeric ``metric``, and satisfy ``live >= tolerance * recorded``.
+    ``live_rows`` are bench-harness rows (``derived`` key=value strings,
+    parsed here); snapshot rows carry pre-parsed ``metrics``."""
+    problems: List[str] = []
+    base_by_name = {r["name"]: r for r in baseline.get("rows", [])}
+    live_by_name = {r["name"]: r for r in live_rows}
+    for name in names:
+        live = live_by_name.get(name)
+        if live is None:
+            problems.append(f"{name}: missing from the live run")
+            continue
+        base = base_by_name.get(name)
+        if base is None:
+            problems.append(f"{name}: missing from the recorded snapshot")
+            continue
+        lv = parse_derived(live.get("derived", "")).get(metric)
+        bv = base.get("metrics", {}).get(metric)
+        if not isinstance(lv, float):
+            problems.append(f"{name}: live run has no numeric {metric!r}")
+            continue
+        if not isinstance(bv, float) or bv <= 0:
+            problems.append(f"{name}: snapshot has no numeric {metric!r}")
+            continue
+        if lv < tolerance * bv:
+            problems.append(
+                f"{name}: {metric} regressed to {lv:.0f} "
+                f"({lv / bv:.2f}x the recorded {bv:.0f}; "
+                f"floor = {tolerance:.2f}x)")
+    return problems
+
+
+def assert_baseline(live_rows: Sequence[Dict], section: str = "dse",
+                    names: Sequence[str] = GUARDED_ROWS,
+                    metric: str = GUARD_METRIC,
+                    tolerance: Optional[float] = None,
+                    budget: Optional[str] = None,
+                    out_dir: Optional[str] = None) -> None:
+    """The CI wiring: load the recorded snapshot for this budget and
+    raise ``AssertionError`` on any breach.  Tolerance resolution:
+    explicit argument > ``BENCH_BASELINE_TOL`` env > 0.5; scaled by
+    ``CROSS_BUDGET_FACTOR`` when falling back across budgets.  A missing
+    snapshot is itself an error — a deleted baseline must not silently
+    disarm the guard."""
+    if budget is None:
+        budget = os.environ.get("BENCH_BUDGET", "full") or "full"
+    if tolerance is None:
+        tolerance = float(os.environ.get("BENCH_BASELINE_TOL", "0.5"))
+    baseline = load_baseline(section, budget, out_dir)
+    if baseline is None:
+        raise AssertionError(
+            f"no recorded baseline for section {section!r} "
+            f"(expected {snapshot_path(section, budget, out_dir).name} or "
+            f"{snapshot_path(section, 'full', out_dir).name}; record one "
+            f"with `python -m benchmarks.run --json`)")
+    if baseline.get("budget", "full") != budget:
+        tolerance *= CROSS_BUDGET_FACTOR
+        print(f"# baseline guard: comparing {budget!r} run against "
+              f"{baseline.get('budget', 'full')!r} snapshot, tolerance "
+              f"scaled to {tolerance:.2f}x", file=sys.stderr)
+    problems = check_rows(live_rows, baseline, names, metric, tolerance)
+    if problems:
+        raise AssertionError(
+            "recorded-baseline guard failed:\n  " + "\n  ".join(problems))
+
+
+def guard_enabled(budget: Optional[str] = None) -> bool:
+    """Whether the guard should run: forced by ``BENCH_BASELINE_GUARD``
+    (1/0), otherwise exactly on the small-budget smoke tier."""
+    env = os.environ.get("BENCH_BASELINE_GUARD")
+    if env is not None:
+        return env not in ("0", "false", "")
+    if budget is None:
+        budget = os.environ.get("BENCH_BUDGET", "full") or "full"
+    return budget == "small"

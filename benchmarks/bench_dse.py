@@ -41,6 +41,15 @@ Sections:
 Budget: set ``BENCH_BUDGET=small`` for a CI-smoke run (few candidates, same
 code paths, loose throughput sanity asserted so evaluator regressions fail
 loudly).
+
+Recorded-baseline guard: on the smoke tier (or when
+``BENCH_BASELINE_GUARD=1``), the live ``dse/packed`` and
+``network/matrix`` rows are additionally ratio-compared against the
+checked-in budget-matched snapshot (``BENCH_dse_small.json`` /
+``BENCH_dse.json``) via :func:`benchmarks.baseline.assert_baseline` —
+an absolute floor on serving-path throughput, not just the relative
+engine-vs-engine floors above.  Default tolerance 0.5x
+(``BENCH_BASELINE_TOL`` overrides), so an injected 2x slowdown fails.
 """
 
 from __future__ import annotations
@@ -341,3 +350,6 @@ def run(rows: List[Dict]) -> None:
     _bench_depth(rows)
     _bench_gradient(rows)
     _bench_network(rows)
+    from .baseline import assert_baseline, guard_enabled
+    if guard_enabled():
+        assert_baseline(rows, section="dse")

@@ -8,13 +8,16 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [--only SECTION[,SECTION]]
 
 ``--only dse`` runs just the DSE sections (what the CI smoke step uses,
 together with ``BENCH_BUDGET=small``); sections: paper, dse, workloads,
-kernels.
+kernels, serve.
 
 ``--json [DIR]`` additionally persists each section's rows as
 ``BENCH_<section>.json`` (default DIR: the repository root) with the
 ``derived`` key=value pairs parsed out, so future sessions can assert
 against a *recorded* trajectory instead of re-measuring ad hoc — e.g.
-``BENCH_dse.json["rows"][i]["metrics"]["configs_per_s"]``.
+``BENCH_dse.json["rows"][i]["metrics"]["configs_per_s"]``.  Non-full
+budgets write ``BENCH_<section>_<budget>.json`` (e.g.
+``BENCH_dse_small.json``) so the recorded-baseline guard
+(``benchmarks/baseline.py``) always compares like-for-like budgets.
 """
 
 from __future__ import annotations
@@ -47,7 +50,11 @@ def parse_derived(derived: str) -> Dict[str, object]:
 
 def write_json(section: str, rows: List[Dict], out_dir: str) -> str:
     """Persist one section's rows (with parsed metrics) as
-    ``BENCH_<section>.json`` under ``out_dir``; returns the path."""
+    ``BENCH_<section>.json`` (full budget) or
+    ``BENCH_<section>_<budget>.json`` under ``out_dir``; returns the
+    path.  The budget suffix keeps smoke-tier snapshots separate from
+    the full-budget trajectory — cross-budget throughput is not
+    comparable (see ``benchmarks.baseline``)."""
     budget = os.environ.get("BENCH_BUDGET", "full") or "full"
     payload = {
         "section": section,
@@ -57,7 +64,8 @@ def write_json(section: str, rows: List[Dict], out_dir: str) -> str:
                   "derived": r["derived"],
                   "metrics": parse_derived(r["derived"])} for r in rows],
     }
-    path = os.path.join(out_dir, f"BENCH_{section}.json")
+    suffix = "" if budget == "full" else f"_{budget}"
+    path = os.path.join(out_dir, f"BENCH_{section}{suffix}.json")
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=1, sort_keys=True)
         fh.write("\n")
@@ -65,10 +73,12 @@ def write_json(section: str, rows: List[Dict], out_dir: str) -> str:
 
 
 def main(argv: List[str] = None) -> int:
-    from . import bench_dse, bench_kernels, bench_paper, bench_workloads
+    from . import (bench_dse, bench_kernels, bench_paper, bench_serve,
+                   bench_workloads)
 
     sections = {"paper": bench_paper, "dse": bench_dse,
-                "workloads": bench_workloads, "kernels": bench_kernels}
+                "workloads": bench_workloads, "kernels": bench_kernels,
+                "serve": bench_serve}
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of sections: "

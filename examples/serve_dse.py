@@ -1,0 +1,128 @@
+"""DSE-as-a-service load harness: many concurrent clients asking "which
+accelerator + config for my workload?" against ONE shared
+:class:`repro.serve.DSEService` — the ROADMAP's serving story, end to
+end.
+
+Fires ``--clients`` threads over a mixed query stream (full-matrix,
+arch-subset, knob-override and top-k queries, each distinct question
+asked ``--repeats`` times), prints the served recommendations and the
+service counters, then exits non-zero unless
+
+* the answer cache actually hit (hit ratio > 0 — repeated questions
+  must never reach the device twice), and
+* the device-sharded evaluator agrees bitwise with the single-device
+  path on the service's candidate pool.
+
+This is the CI ``serve-smoke`` gate; force a multi-device host CPU with::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python examples/serve_dse.py --budget small
+"""
+
+import argparse
+import os
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.core.aidg.explorer import Explorer
+from repro.serve import DSEService, Query
+
+
+def build_stream(ex, repeats):
+    """The client workload: every served workload asked three ways
+    (full matrix, top-3, with a pinned knob), every arch asked for its
+    own profile — repeated so the cache has something to hit."""
+    workloads = sorted({cs.workload for cs in ex.compiled})
+    archs = sorted({cs.arch for cs in ex.compiled})
+    knob = ex.space.names[0]
+    distinct = []
+    for w in workloads:
+        distinct += [Query.make(workload=w),
+                     Query.make(workload=w, top_k=3),
+                     Query.make(workload=w, overrides={knob: 2.0})]
+    distinct += [Query.make(archs=[a]) for a in archs]
+    return distinct, distinct * repeats
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--budget", choices=("small", "full"),
+                    default=os.environ.get("BENCH_BUDGET", "small")
+                    or "small")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="times each distinct query is asked "
+                         "(default: 3 small / 8 full)")
+    args = ap.parse_args(argv)
+    pool = 32 if args.budget == "small" else 128
+    repeats = args.repeats or (3 if args.budget == "small" else 8)
+
+    t0 = time.perf_counter()
+    ex = Explorer()
+    print(f"compiled matrix: {len(ex.compiled)} cells, "
+          f"{ex.space.n} knobs ({time.perf_counter() - t0:.1f}s)")
+    distinct, stream = build_stream(ex, repeats)
+
+    with DSEService(ex, pool=pool, chunk=pool, max_batch=8,
+                    window_s=0.005) as svc:
+        t0 = time.perf_counter()
+        with ThreadPoolExecutor(max_workers=args.clients) as tp:
+            answers = list(tp.map(svc.query, stream))
+        dt = time.perf_counter() - t0
+        st = svc.stats()
+
+    print(f"\n{len(stream)} queries from {args.clients} clients in "
+          f"{dt:.2f}s ({len(stream) / dt:.0f} q/s), coalesced into "
+          f"{st['windows']} windows / {st['device_dispatches']} device "
+          f"dispatches (mean batch {st['mean_batch']:.1f})")
+
+    print("\nserved recommendations (one per distinct question):")
+    seen = set()
+    for a in answers:
+        if a.query.key in seen:
+            continue
+        seen.add(a.query.key)
+        d = a.best
+        what = a.query.workload or f"archs={list(a.query.archs)}"
+        pins = ",".join(f"{k}={v:g}" for k, v in a.query.overrides)
+        print(f"  {what:14s} {'[' + pins + ']' if pins else '':14s}"
+              f"-> {a.best_arch:10s} latency {d.latency:.3f} "
+              f"cost {d.cost:.2f} ({len(a.designs)} Pareto designs over "
+              f"{len(a.cells)} cells)")
+
+    cs = st["cache"]
+    print(f"\ncache: {cs['hits']} hits + {cs['coalesced']} coalesced / "
+          f"{cs['misses']} misses (hit ratio {st['hit_ratio']:.2f}); "
+          f"{st['dispatched_candidates']} candidate rows evaluated "
+          f"device-side")
+
+    # -- the two serve-smoke gates -----------------------------------------
+    ok = True
+    if st["hit_ratio"] <= 0.0:
+        print("FAIL: answer cache never hit", file=sys.stderr)
+        ok = False
+
+    pm = ex.packed_matrix()
+    devices = pm.n_shards(None)
+    cand = svc.pool
+    single = pm.evaluate(cand)
+    shard = pm.evaluate(cand, sharded=True)
+    exact = bool(np.array_equal(single, shard))
+    print(f"sharded check: {devices} device(s), "
+          f"bitwise agreement = {exact}")
+    if not exact:
+        print("FAIL: sharded evaluation diverges from single-device",
+              file=sys.stderr)
+        ok = False
+
+    if not ok:
+        return 1
+    print("serve-smoke gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -979,26 +979,88 @@ class PackedMatrix:
             self._compiled["hard"] = fn
         return fn
 
+    def n_shards(self, n_devices: Optional[int] = None) -> int:
+        """Devices the sharded evaluator spreads the candidate axis over:
+        ``n_devices`` capped by what the backend exposes (force more host
+        CPU devices with ``XLA_FLAGS=--xla_force_host_platform_device_count
+        =8``), all local devices when ``None``."""
+        avail = jax.local_device_count()
+        if n_devices is None:
+            return avail
+        if not (1 <= n_devices <= avail):
+            raise ValueError(f"n_devices must be in [1, {avail}], "
+                             f"got {n_devices}")
+        return int(n_devices)
+
+    def sharded_fn(self, n_devices: Optional[int] = None) -> Callable:
+        """Cached device-sharded hard evaluator: ``fn(knobs (B, K)) ->
+        (B, S)`` with the CANDIDATE axis split across ``n_shards``
+        devices via ``shard_map`` (``pmap`` fallback on JAX builds without
+        it) — each device runs the same vmapped packed evaluator over its
+        B/D slice, so results are bitwise identical to the single-device
+        path (per-candidate rows are independent; asserted by
+        ``tests/test_serve.py``).  B must be a multiple of the device
+        count — ``evaluate(sharded=True)`` pads for you."""
+        D = self.n_shards(n_devices)
+        key = ("sharded", D)
+        fn = self._compiled.get(key)
+        if fn is None:
+            f = self._matrix_fn(soft=False)
+            batched = jax.vmap(lambda k: f(k, jnp.float32(1.0)))
+            devices = jax.local_devices()[:D]
+            try:
+                from jax.experimental.shard_map import shard_map
+                from jax.sharding import Mesh, PartitionSpec as P
+                mesh = Mesh(np.asarray(devices), ("cand",))
+                fn = jax.jit(shard_map(batched, mesh=mesh,
+                                       in_specs=P("cand"),
+                                       out_specs=P("cand")))
+            except ImportError:       # pre-shard_map JAX: explicit pmap
+                pfn = jax.pmap(batched, devices=devices)
+
+                def fn(kt, _pfn=pfn, _D=D):
+                    B = kt.shape[0]
+                    out = _pfn(kt.reshape(_D, B // _D, kt.shape[1]))
+                    return out.reshape(B, -1)
+            self._compiled[key] = fn
+        return fn
+
     def evaluate(self, knob_thetas: np.ndarray,
-                 chunk: Optional[int] = None) -> np.ndarray:
-        """(B, n_knobs) candidates -> (B, S) estimated cycles.  ``chunk``
-        bounds peak memory; the tail chunk is padded to the compiled batch
-        shape (no per-remainder re-trace)."""
-        fn = self.evaluate_fn()
+                 chunk: Optional[int] = None, sharded: bool = False,
+                 n_devices: Optional[int] = None) -> np.ndarray:
+        """(B, n_knobs) candidates -> (B, S) estimated cycles.
+
+        ``chunk`` bounds peak memory; every partial chunk is padded to the
+        compiled batch shape (no per-remainder re-trace).  ``sharded``
+        splits the candidate axis across ``n_devices`` local devices
+        (``sharded_fn``) for near-linear multi-device throughput with
+        bitwise-identical results; the batch is padded with θ = 1 rows up
+        to a device multiple and sliced back."""
+        if sharded:
+            mult = self.n_shards(n_devices)
+            fn = self.sharded_fn(mult)
+        else:
+            mult = 1
+            fn = self.evaluate_fn()
         kt = jnp.asarray(np.atleast_2d(np.asarray(knob_thetas, np.float32)))
         B = kt.shape[0]
+
+        def run(block, rows):
+            """Evaluate ``block`` padded with θ = 1 rows up to ``rows``."""
+            n = block.shape[0]
+            if n < rows:
+                block = jnp.concatenate(
+                    [block, jnp.ones((rows - n, kt.shape[1]), jnp.float32)])
+            return np.asarray(fn(block))[:n]
+
+        up = lambda n: -(-n // mult) * mult   # round up to device multiple
         if chunk is None or B <= chunk:
-            return np.asarray(fn(kt))
+            return run(kt, up(B))
+        step = up(chunk)
         out = np.empty((B, self.n_cells), dtype=np.float32)
-        for s in range(0, B, chunk):
-            e = min(s + chunk, B)
-            if e - s < chunk:
-                pad = chunk - (e - s)
-                ck = jnp.concatenate(
-                    [kt[s:e], jnp.ones((pad, kt.shape[1]), jnp.float32)])
-                out[s:e] = np.asarray(fn(ck))[: e - s]
-            else:
-                out[s:e] = np.asarray(fn(kt[s:e]))
+        for s in range(0, B, step):
+            e = min(s + step, B)
+            out[s:e] = run(kt[s:e], step)
         return out
 
     def grad_fn(self, baselines: np.ndarray) -> Callable:

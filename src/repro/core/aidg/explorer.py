@@ -69,7 +69,7 @@ __all__ = [
     "Scenario", "CompiledScenario", "default_scenarios", "compile_scenario",
     "clear_scenario_cache", "scenario_cache_stats", "Knob", "DesignSpace",
     "DEFAULT_SPACE", "EXPLORER_ENGINES", "DEFAULT_EXPLORER_ENGINE",
-    "grid_candidates", "random_candidates", "pareto_front",
+    "grid_candidates", "random_candidates", "pareto_front", "resolve_cells",
     "Explorer", "ExplorationResult",
 ]
 
@@ -233,6 +233,17 @@ class CompiledScenario:
     def name(self) -> str:
         """Display name inherited from the scenario (``arch/workload``)."""
         return self.scenario.name
+
+    @property
+    def arch(self) -> str:
+        """The cell's architecture (query-resolution protocol)."""
+        return self.scenario.arch
+
+    @property
+    def workload(self) -> str:
+        """The cell's workload kind (query-resolution protocol): an
+        operator name here; network cells report their network name."""
+        return self.scenario.workload
 
     @property
     def compiled_aidg(self) -> CompiledAIDG:
@@ -498,6 +509,33 @@ def pareto_front(objectives: np.ndarray) -> np.ndarray:
     return np.asarray(keep, dtype=np.int64)
 
 
+def resolve_cells(compiled: Sequence, workload: Optional[str] = None,
+                  archs: Optional[Sequence[str]] = None) -> List[int]:
+    """Query resolution over the cell protocol: matrix column indices of
+    the cells matching a (workload, architecture-subset) question.
+
+    ``workload`` matches each cell's ``workload`` property exactly — an
+    operator kind (``"gemm"``) for operator cells, a network name
+    (``"whisper_small"``) for network cells; ``None`` matches every
+    workload.  ``archs`` restricts to those architectures (``None`` = no
+    restriction).  Raises ``KeyError`` listing what IS served when
+    nothing matches — a typo'd query must fail loudly, not answer over an
+    empty subset."""
+    if isinstance(archs, str):
+        archs = (archs,)
+    wanted = None if archs is None else set(archs)
+    idx = [i for i, cs in enumerate(compiled)
+           if (workload is None or cs.workload == workload)
+           and (wanted is None or cs.arch in wanted)]
+    if not idx:
+        served = sorted({cs.workload for cs in compiled})
+        on = sorted({cs.arch for cs in compiled})
+        raise KeyError(
+            f"no cell matches workload={workload!r} archs={archs!r}; "
+            f"served workloads: {served} on architectures: {on}")
+    return idx
+
+
 @dataclass
 class ExplorationResult:
     """One batched sweep over the matrix: per-candidate cycles per scenario
@@ -650,16 +688,24 @@ class Explorer:
         return self._packed
 
     def evaluate(self, knob_thetas: np.ndarray,
-                 chunk: Optional[int] = None) -> np.ndarray:
+                 chunk: Optional[int] = None, sharded: bool = False,
+                 n_devices: Optional[int] = None) -> np.ndarray:
         """(B, n_knobs) candidates -> (B, S) estimated cycles.  With the
         default ``engine="packed"``, the WHOLE matrix x batch is one
-        jitted dispatch; per-cell engines fall back to one batched sweep
-        per scenario over cached compiled kernels."""
+        jitted dispatch — optionally ``sharded`` over the candidate axis
+        across ``n_devices`` local devices (bitwise-identical results,
+        see ``PackedMatrix.sharded_fn``); per-cell engines fall back to
+        one batched sweep per scenario over cached compiled kernels."""
         kt = np.asarray(knob_thetas, np.float32)
         if kt.ndim == 1:
             kt = kt[None, :]
         if self.engine == "packed":
-            return self.packed_matrix().evaluate(kt, chunk=chunk)
+            return self.packed_matrix().evaluate(kt, chunk=chunk,
+                                                 sharded=sharded,
+                                                 n_devices=n_devices)
+        if sharded:
+            raise ValueError("sharded evaluation requires engine='packed' "
+                             f"(this explorer uses {self.engine!r})")
         cols = [cs.evaluate(self.space, kt, proj, n_iters=self.n_iters,
                             chunk=chunk, engine=self.engine)
                 for cs, proj in zip(self.compiled, self._projections)]

@@ -175,6 +175,18 @@ class CompiledNetwork:
         return self.scenario.name
 
     @property
+    def arch(self) -> str:
+        """The cell's architecture (query-resolution protocol)."""
+        return self.scenario.arch
+
+    @property
+    def workload(self) -> str:
+        """The cell's workload kind (query-resolution protocol): the
+        network name, so a served query for e.g. ``"whisper_small"``
+        resolves to this cell on every mapped architecture."""
+        return self.scenario.network
+
+    @property
     def n_layers(self) -> int:
         """Unique per-layer programs (the compile unit)."""
         return len(self.cells)

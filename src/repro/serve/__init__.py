@@ -1,0 +1,16 @@
+"""DSE-as-a-service: the persistent, micro-batching, cache-backed query
+engine over the matrix-packed evaluator (see ``docs/serving.md``).
+
+    from repro.serve import DSEService, Query
+
+    with DSEService(networks=True, sharded=True) as svc:
+        ans = svc.query(workload="gemm", archs=("gamma", "tpu_v5e"))
+        print(ans.best_arch, ans.best.knobs(svc.space.names))
+"""
+
+from .batcher import MicroBatcher, plan_batches
+from .engine import DSEService
+from .query import Answer, Design, Query
+
+__all__ = ["DSEService", "MicroBatcher", "plan_batches",
+           "Query", "Design", "Answer"]

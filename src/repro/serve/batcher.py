@@ -1,0 +1,180 @@
+"""Bounded-window micro-batching for concurrent query streams.
+
+Many clients submit items concurrently; one worker thread coalesces them
+into *dispatches* — contiguous, arrival-ordered batches of at most
+``max_batch`` items, closed early when the batch fills and at the latest
+``window_s`` seconds after its first item arrived.  The dispatch callback
+receives the whole batch and returns one result per item; results resolve
+the per-item futures.
+
+The batching CONTRACT the property tests pin down
+(``tests/test_property.py``):
+
+* every submitted item lands in exactly one dispatch (the dispatch log is
+  a partition of the submission sequence — no drop, no dup);
+* batches are contiguous in arrival order (the worker drains FIFO);
+* per-item results never depend on batchmates (that part is the dispatch
+  function's obligation — the service keeps per-query answers a pure
+  function of the query, which is what makes micro-batching invisible).
+
+``hold()`` freezes batch formation (submissions queue up but nothing
+dispatches) so tests and benchmarks can stage exact window contents
+instead of racing the wall clock.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from contextlib import contextmanager
+from typing import Callable, List, Sequence, Tuple
+
+__all__ = ["MicroBatcher", "plan_batches"]
+
+
+def plan_batches(n: int, max_batch: int) -> List[Tuple[int, int]]:
+    """Arrival-ordered batch boundaries for ``n`` pending items:
+    ``[(start, end), ...]`` half-open index ranges, each at most
+    ``max_batch`` long — the same greedy FIFO split the worker thread
+    applies, exposed pure so the synchronous replay path
+    (``DSEService.query_many``) provably coalesces identically."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    return [(s, min(s + max_batch, n)) for s in range(0, n, max_batch)]
+
+
+class MicroBatcher:
+    """One worker thread turning concurrent ``submit`` calls into bounded
+    arrival-ordered dispatches (see the module docstring for the
+    contract).  ``dispatch`` maps a list of items to a list of results of
+    the same length; an exception from it fails every future in the
+    batch.  ``dispatch_log`` records the sequence numbers of every batch,
+    in dispatch order — the partition evidence tests assert on."""
+
+    def __init__(self, dispatch: Callable[[List], List],
+                 max_batch: int = 8, window_s: float = 0.002):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if window_s < 0:
+            raise ValueError(f"window_s must be >= 0, got {window_s}")
+        self._dispatch = dispatch
+        self.max_batch = int(max_batch)
+        self.window_s = float(window_s)
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._pending: List[Tuple[int, object, Future]] = []
+        self._seq = 0
+        self._held = 0
+        self._in_flight = 0
+        self._closed = False
+        self.dispatch_log: List[List[int]] = []
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="microbatcher")
+        self._worker.start()
+
+    # -- client side --------------------------------------------------------
+
+    def submit(self, item) -> Future:
+        """Enqueue one item; returns the future its result will resolve."""
+        fut: Future = Future()
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("MicroBatcher is closed")
+            self._pending.append((self._seq, item, fut))
+            self._seq += 1
+            self._cond.notify_all()
+        return fut
+
+    @contextmanager
+    def hold(self):
+        """Freeze batch formation while the context is open: submissions
+        accumulate into one window deterministically (tests/benchmarks
+        stage exact batch contents instead of racing ``window_s``)."""
+        with self._cond:
+            self._held += 1
+        try:
+            yield self
+        finally:
+            with self._cond:
+                self._held -= 1
+                self._cond.notify_all()
+
+    def drain(self, timeout: float = 30.0) -> None:
+        """Block until every already-submitted item has been dispatched
+        AND its future resolved (the dispatch log is complete up to the
+        last pre-drain submission when this returns)."""
+        deadline = time.monotonic() + timeout
+        with self._cond:
+            while self._pending or self._in_flight:
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    raise TimeoutError("MicroBatcher.drain timed out")
+                self._cond.wait(left)
+
+    def close(self) -> None:
+        """Dispatch whatever is pending, then stop the worker thread."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        self._worker.join()
+
+    # -- worker side --------------------------------------------------------
+
+    def _take_batch(self) -> List[Tuple[int, object, Future]]:
+        """Wait for a window to close, then pop the next FIFO batch: at
+        most ``max_batch`` items, no earlier than ``window_s`` after the
+        window's first item arrived (unless the batch is already full, or
+        the batcher is closing)."""
+        with self._cond:
+            while True:
+                if self._pending and not self._held:
+                    deadline = self._window_open + self.window_s
+                    if (len(self._pending) >= self.max_batch
+                            or self._closed
+                            or time.monotonic() >= deadline):
+                        batch = self._pending[: self.max_batch]
+                        del self._pending[: len(batch)]
+                        self._in_flight += 1
+                        return batch
+                    self._cond.wait(max(0.0, deadline - time.monotonic()))
+                    continue
+                if self._closed and not self._pending:
+                    return []
+                if self._pending and self._held:
+                    self._cond.wait()
+                else:
+                    # idle: note when the NEXT window opens
+                    self._cond.wait()
+                    self._window_open = time.monotonic()
+
+    def _run(self) -> None:
+        self._window_open = time.monotonic()
+        while True:
+            batch = self._take_batch()
+            if not batch:
+                return
+            self._window_open = time.monotonic()
+            items = [it for _, it, _ in batch]
+            try:
+                results = self._dispatch(items)
+                if len(results) != len(items):
+                    raise RuntimeError(
+                        f"dispatch returned {len(results)} results for "
+                        f"{len(items)} items")
+            except Exception as e:     # noqa: BLE001 — forwarded to futures
+                self.dispatch_log.append([seq for seq, _, _ in batch])
+                for _, _, fut in batch:
+                    fut.set_exception(e)
+                self._settle()
+                continue
+            self.dispatch_log.append([seq for seq, _, _ in batch])
+            for (_, _, fut), res in zip(batch, results):
+                fut.set_result(res)
+            self._settle()
+
+    def _settle(self) -> None:
+        with self._cond:
+            self._in_flight -= 1
+            if not self._pending and not self._in_flight:
+                self._cond.notify_all()   # wake drain()

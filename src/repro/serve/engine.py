@@ -1,0 +1,289 @@
+"""DSE-as-a-service: a persistent, micro-batching, cache-backed query
+engine over the matrix-packed evaluator.
+
+The ROADMAP's millions-of-users story: many concurrent clients ask
+"which accelerator + config for my model?" and share ONE compiled engine.
+:class:`DSEService` wires three layers together:
+
+* **one compiled matrix** — an :class:`repro.core.aidg.explorer.Explorer`
+  (``engine="packed"`` by default) whose :class:`PackedMatrix` evaluates
+  every cell x every candidate in a single jitted dispatch, optionally
+  sharded over the candidate axis across devices
+  (``PackedMatrix.evaluate(sharded=True)``);
+* **a bounded micro-batch window** — concurrent queries coalesce into
+  shared packed dispatches (:class:`repro.serve.batcher.MicroBatcher`):
+  queries arriving within ``window_s`` of each other (up to ``max_batch``)
+  ride one device launch, their candidate blocks stacked along the batch
+  axis;
+* **an answer cache** — canonical query keys (:attr:`Query.key`) memoize
+  fully-ranked answers, with hit/miss counters mirroring the scenario
+  cache's (``explorer.scenario_cache_stats``); repeated questions never
+  touch the device again.
+
+**Determinism.**  Every answer is a pure function of (candidate pool,
+query): the pool is fixed at construction, per-candidate evaluation is
+row-independent and bitwise deterministic, and ranking is the
+deterministic ``pareto_front``.  So the served answer is byte-equal to a
+direct Explorer sweep of the same candidates, identical regardless of
+arrival order, batching, cache state, or sharding — asserted by
+``tests/test_serve.py``.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.aidg.explorer import (Explorer, pareto_front, random_candidates,
+                                  resolve_cells, scenario_cache_stats)
+from .batcher import MicroBatcher, plan_batches
+from .query import Answer, Design, Query
+
+__all__ = ["DSEService"]
+
+
+class DSEService:
+    """The persistent query service (see module docstring).
+
+    ``explorer``: a pre-built Explorer to serve; when ``None``, one is
+    constructed from ``scenarios`` / ``networks`` (the Explorer defaults).
+    ``pool`` / ``seed`` / ``candidates``: the shared candidate pool —
+    either an explicit ``(B, n_knobs)`` array or ``pool`` log-uniform
+    samples (row 0 = θ = 1, so the reference machine is always ranked).
+    ``max_batch`` / ``window_s``: the micro-batch window (at most
+    ``max_batch`` queries per dispatch, closed ``window_s`` seconds after
+    the first arrival).
+    ``sharded`` / ``n_devices``: shard every dispatch's candidate axis
+    across devices (bitwise-identical results, see
+    ``PackedMatrix.evaluate``).
+    ``chunk``: bound per-dispatch device batch rows (memory cap).
+    """
+
+    def __init__(self, explorer: Optional[Explorer] = None, *,
+                 scenarios=None, networks=False,
+                 pool: int = 64, seed: int = 0,
+                 candidates: Optional[np.ndarray] = None,
+                 max_batch: int = 8, window_s: float = 0.002,
+                 sharded: bool = False, n_devices: Optional[int] = None,
+                 chunk: Optional[int] = None):
+        if explorer is None:
+            explorer = Explorer(scenarios=scenarios, networks=networks)
+        self.explorer = explorer
+        self.space = explorer.space
+        if candidates is None:
+            candidates = random_candidates(self.space, pool, seed=seed)
+        self.pool = np.asarray(candidates, np.float32)
+        if self.pool.ndim != 2 or self.pool.shape[1] != self.space.n:
+            raise ValueError(f"candidate pool must be (B, {self.space.n}), "
+                             f"got {self.pool.shape}")
+        self.sharded = bool(sharded)
+        self.n_devices = n_devices
+        self.chunk = chunk
+        self._lock = threading.Lock()
+        self._cache: Dict[Tuple, Answer] = {}
+        self.cache_stats = {"hits": 0, "misses": 0, "coalesced": 0}
+        self._resolved: Dict[Tuple, Tuple[Tuple[str, ...], np.ndarray]] = {}
+        self.dispatched_candidates = 0
+        # every window that reached _dispatch (threaded OR replay), as
+        # query keys; and the deduped keys each DEVICE dispatch evaluated
+        self.window_log: List[List[Tuple]] = []
+        self.evaluated_log: List[List[Tuple]] = []
+        self.batcher = MicroBatcher(self._dispatch, max_batch=max_batch,
+                                    window_s=window_s)
+
+    # -- client surface -----------------------------------------------------
+
+    def submit(self, query: Optional[Query] = None, **kwargs):
+        """Enqueue one query into the current micro-batch window; returns
+        a future resolving to its :class:`Answer`.  Accepts either a
+        :class:`Query` or ``Query.make`` keyword arguments.  Resolution
+        and override validation happen HERE, in the caller — a malformed
+        query fails fast and can never poison its window's batchmates."""
+        q = self._canonical(query, kwargs)
+        self._resolve(q)               # validates workload/arch subset
+        self._override_columns(q)      # validates knob names + bounds
+        return self.batcher.submit(q)
+
+    def query(self, query: Optional[Query] = None, timeout: float = 120.0,
+              **kwargs) -> Answer:
+        """Blocking ``submit``: one answer, through the shared window."""
+        return self.submit(query, **kwargs).result(timeout=timeout)
+
+    def query_many(self, queries: Sequence[Query]) -> List[Answer]:
+        """Sequential replay oracle: the same queries through the same
+        dispatch path, coalesced by the same FIFO plan the worker thread
+        uses (``plan_batches``) but synchronously in the caller — the
+        reference answers the concurrency/determinism tests compare the
+        threaded path against."""
+        queries = [self._canonical(q, {}) for q in queries]
+        out: List[Answer] = []
+        for s, e in plan_batches(len(queries), self.batcher.max_batch):
+            out.extend(self._dispatch(queries[s:e]))
+        return out
+
+    def close(self) -> None:
+        """Flush pending windows and stop the worker thread."""
+        self.batcher.close()
+
+    def __enter__(self) -> "DSEService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def stats(self) -> Dict[str, object]:
+        """Service counters: answer-cache hits/misses/coalesced, dispatch
+        count and mean batch size, total device-evaluated candidates, and
+        the process-wide scenario-cache counters the answer cache
+        mirrors."""
+        with self._lock:
+            cs = dict(self.cache_stats)
+            cand = self.dispatched_candidates
+            windows = len(self.window_log)
+            n_queries = sum(len(b) for b in self.window_log)
+            device = len(self.evaluated_log)
+        return {
+            "cache": cs,
+            "hit_ratio": (cs["hits"] + cs["coalesced"])
+            / max(1, cs["hits"] + cs["coalesced"] + cs["misses"]),
+            "windows": windows,
+            "device_dispatches": device,
+            "dispatched_queries": n_queries,
+            "mean_batch": n_queries / max(1, windows),
+            "dispatched_candidates": cand,
+            "pool": int(self.pool.shape[0]),
+            "cells": len(self.explorer.compiled),
+            "sharded": self.sharded,
+            "scenario_cache": scenario_cache_stats(),
+        }
+
+    # -- resolution ---------------------------------------------------------
+
+    def _canonical(self, query: Optional[Query], kwargs) -> Query:
+        if query is None:
+            return Query.make(**kwargs)
+        if kwargs:
+            raise TypeError("pass a Query OR Query.make kwargs, not both")
+        # re-canonicalize hand-built dataclasses (sorts archs/overrides)
+        return Query.make(query.workload, query.archs, query.override_map,
+                          query.top_k)
+
+    def _resolve(self, q: Query) -> Tuple[Tuple[str, ...], np.ndarray]:
+        """Query -> (cell names, matrix column indices), memoized."""
+        key = (q.workload, q.archs)
+        hit = self._resolved.get(key)
+        if hit is None:
+            idx = resolve_cells(self.explorer.compiled, workload=q.workload,
+                                archs=q.archs)
+            names = tuple(self.explorer.compiled[i].name for i in idx)
+            hit = (names, np.asarray(idx, np.int64))
+            self._resolved[key] = hit
+        return hit
+
+    def _override_columns(self, q: Query) -> List[Tuple[int, float]]:
+        """Validated (knob column, pinned θ) pairs for a query."""
+        cols = []
+        for name, val in q.overrides:
+            if name not in self.space.names:
+                raise KeyError(f"unknown knob {name!r}; space has "
+                               f"{self.space.names}")
+            ki = self.space.names.index(name)
+            knob = self.space.knobs[ki]
+            if not (knob.lo <= val <= knob.hi):
+                raise ValueError(f"override {name}={val} outside "
+                                 f"[{knob.lo}, {knob.hi}]")
+            cols.append((ki, float(val)))
+        return cols
+
+    def _candidates_for(self, q: Query) -> np.ndarray:
+        """The query's effective candidate block: the shared pool with the
+        overridden knob columns pinned (a pure function of the query, so
+        identical queries always evaluate identical candidates)."""
+        cand = self.pool.copy()
+        for ki, val in self._override_columns(q):
+            cand[:, ki] = val
+        return cand
+
+    # -- the coalesced dispatch --------------------------------------------
+
+    def _dispatch(self, queries: List[Query]) -> List[Answer]:
+        """One micro-batch window -> one packed device dispatch.
+
+        Cache hits answer immediately; the remaining queries are deduped
+        by key (same-window duplicates coalesce onto one computation) and
+        grouped by override signature (same overrides = same candidate
+        block, evaluated once); the distinct blocks are stacked along the
+        candidate axis and evaluated in ONE ``PackedMatrix`` dispatch
+        (sharded over devices when configured).  Per-candidate rows are
+        independent, so stacking order cannot change any query's answer.
+        """
+        with self._lock:
+            answers: Dict[Tuple, Answer] = {}
+            order: List[Tuple] = []
+            fresh: Dict[Tuple, Query] = {}
+            self.window_log.append([q.key for q in queries])
+            for q in queries:
+                order.append(q.key)
+                if q.key in answers or q.key in fresh:
+                    self.cache_stats["coalesced"] += 1
+                elif q.key in self._cache:
+                    self.cache_stats["hits"] += 1
+                    cached = self._cache[q.key]
+                    answers[q.key] = Answer(cached.query, cached.cells,
+                                            cached.designs,
+                                            cached.best_arch, cached=True)
+                else:
+                    self.cache_stats["misses"] += 1
+                    fresh[q.key] = q
+
+        if fresh:
+            # one candidate block per distinct override signature
+            blocks: Dict[Tuple, np.ndarray] = {}
+            for q in fresh.values():
+                if q.overrides not in blocks:
+                    blocks[q.overrides] = self._candidates_for(q)
+            sigs = list(blocks)
+            stacked = np.concatenate([blocks[s] for s in sigs], axis=0)
+            cycles = self.explorer.evaluate(stacked, chunk=self.chunk,
+                                            sharded=self.sharded,
+                                            n_devices=self.n_devices)
+            starts = dict(zip(sigs, np.cumsum(
+                [0] + [blocks[s].shape[0] for s in sigs[:-1]])))
+            with self._lock:
+                self.dispatched_candidates += stacked.shape[0]
+                self.evaluated_log.append(list(fresh))
+                for key, q in fresh.items():
+                    s = int(starts[q.overrides])
+                    block = blocks[q.overrides]
+                    ans = self._rank(q, block, cycles[s: s + block.shape[0]])
+                    answers[key] = ans
+                    self._cache[key] = ans
+
+        return [answers[k] for k in order]
+
+    def _rank(self, q: Query, cand: np.ndarray,
+              cycles: np.ndarray) -> Answer:
+        """Score one query's candidate block over its resolved cell subset
+        and extract the Pareto-ranked top-k designs — the same latency /
+        cost / ``pareto_front`` pipeline as ``Explorer.explore``, with
+        latency averaged over the queried cells only."""
+        names, cols = self._resolve(q)
+        rel = cycles[:, cols] / self.explorer.baselines[None, cols]
+        latency = rel.mean(axis=1)
+        cost = self.explorer.cost_proxy(cand)
+        front = pareto_front(np.stack([latency, cost], axis=1))
+        top = front[: q.top_k]
+        designs = tuple(
+            Design(theta=tuple(float(v) for v in cand[i]),
+                   latency=float(latency[i]), cost=float(cost[i]),
+                   cycles=tuple(float(c) for c in cycles[i, cols]))
+            for i in top)
+        # "which accelerator": the arch whose cell runs the top design at
+        # the lowest baseline-relative latency
+        lead = int(top[0]) if len(top) else int(np.argmin(latency))
+        best_cell = int(np.argmin(rel[lead]))
+        best_arch = self.explorer.compiled[int(cols[best_cell])].arch
+        return Answer(query=q, cells=names, designs=designs,
+                      best_arch=best_arch)

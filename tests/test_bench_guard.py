@@ -1,0 +1,215 @@
+"""The recorded-baseline regression guard (``benchmarks/baseline.py``),
+verified — not just wired.
+
+Covers the comparator on synthetic snapshots (missing row, within
+tolerance, breach), tolerance resolution (argument / env / cross-budget
+scaling), snapshot loading preference, the injected-2x-slowdown
+acceptance check against the REAL checked-in ``BENCH_dse*.json``, and
+the wiring inside ``benchmarks.bench_dse.run`` itself (a slowed packed
+row must abort the bench)."""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from benchmarks import baseline  # noqa: E402
+
+
+def snap(packed=1000.0, network=2000.0, budget="small"):
+    """A synthetic recorded snapshot in the run.py --json shape."""
+    return {"section": "dse", "budget": budget, "rows": [
+        {"name": "dse/packed", "us_per_call": 1.0,
+         "derived": f"configs_per_s={packed}",
+         "metrics": {"configs_per_s": packed}},
+        {"name": "network/matrix", "us_per_call": 1.0,
+         "derived": f"configs_per_s={network}",
+         "metrics": {"configs_per_s": network}},
+    ]}
+
+
+def live(packed=1000.0, network=2000.0, extra=()):
+    """Synthetic LIVE bench rows (raw ``derived`` strings, as handed to
+    the guard by ``bench_dse.run``)."""
+    rows = [
+        {"name": "dse/packed", "us_per_call": 1.0,
+         "derived": f"engine=packed;configs_per_s={packed:.0f}"},
+        {"name": "network/matrix", "us_per_call": 1.0,
+         "derived": f"engine=packed;configs_per_s={network:.0f}"},
+    ]
+    rows.extend(extra)
+    return rows
+
+
+# -- check_rows: the comparator ---------------------------------------------
+
+def test_within_tolerance_passes():
+    assert baseline.check_rows(live(900.0, 1900.0), snap()) == []
+
+
+def test_faster_than_recorded_passes():
+    assert baseline.check_rows(live(5000.0, 9000.0), snap()) == []
+
+
+def test_breach_reports_the_slowed_row():
+    problems = baseline.check_rows(live(packed=400.0), snap())
+    assert len(problems) == 1
+    assert "dse/packed" in problems[0] and "regressed" in problems[0]
+
+
+def test_both_rows_can_breach():
+    problems = baseline.check_rows(live(400.0, 100.0), snap())
+    assert len(problems) == 2
+
+
+def test_missing_live_row_is_a_problem():
+    rows = [r for r in live() if r["name"] != "network/matrix"]
+    problems = baseline.check_rows(rows, snap())
+    assert problems == ["network/matrix: missing from the live run"]
+
+
+def test_missing_snapshot_row_is_a_problem():
+    s = snap()
+    s["rows"] = [r for r in s["rows"] if r["name"] != "dse/packed"]
+    problems = baseline.check_rows(live(), s)
+    assert problems == ["dse/packed: missing from the recorded snapshot"]
+
+
+def test_non_numeric_metric_is_a_problem():
+    rows = live()
+    rows[0]["derived"] = "engine=packed"        # no configs_per_s at all
+    problems = baseline.check_rows(rows, snap())
+    assert "no numeric" in problems[0]
+
+
+def test_tolerance_is_configurable():
+    # 0.9x the recorded rate: fine at the default 0.5, breach at 0.95
+    assert baseline.check_rows(live(900.0, 1800.0), snap()) == []
+    tight = baseline.check_rows(live(900.0, 1800.0), snap(), tolerance=0.95)
+    assert len(tight) == 2
+
+
+# -- snapshot naming + loading ----------------------------------------------
+
+def test_snapshot_path_budget_suffix(tmp_path):
+    assert baseline.snapshot_path("dse", "full", tmp_path).name \
+        == "BENCH_dse.json"
+    assert baseline.snapshot_path("dse", "small", tmp_path).name \
+        == "BENCH_dse_small.json"
+
+
+def test_load_baseline_prefers_budget_match(tmp_path):
+    (tmp_path / "BENCH_dse.json").write_text(json.dumps(snap(budget="full")))
+    (tmp_path / "BENCH_dse_small.json").write_text(
+        json.dumps(snap(packed=123.0, budget="small")))
+    got = baseline.load_baseline("dse", "small", tmp_path)
+    assert got["budget"] == "small"
+    assert got["rows"][0]["metrics"]["configs_per_s"] == 123.0
+
+
+def test_load_baseline_falls_back_to_full(tmp_path):
+    (tmp_path / "BENCH_dse.json").write_text(json.dumps(snap(budget="full")))
+    got = baseline.load_baseline("dse", "small", tmp_path)
+    assert got["budget"] == "full"
+    assert baseline.load_baseline("dse", "small", tmp_path / "nope") is None
+
+
+# -- assert_baseline: the CI wiring -----------------------------------------
+
+def test_assert_baseline_passes_and_breaches(tmp_path):
+    (tmp_path / "BENCH_dse_small.json").write_text(json.dumps(snap()))
+    baseline.assert_baseline(live(900.0, 1900.0), budget="small",
+                             out_dir=tmp_path)
+    with pytest.raises(AssertionError, match="dse/packed"):
+        baseline.assert_baseline(live(packed=400.0), budget="small",
+                                 out_dir=tmp_path)
+
+
+def test_assert_baseline_missing_snapshot_is_an_error(tmp_path):
+    with pytest.raises(AssertionError, match="no recorded baseline"):
+        baseline.assert_baseline(live(), budget="small", out_dir=tmp_path)
+
+
+def test_assert_baseline_env_tolerance(tmp_path, monkeypatch):
+    (tmp_path / "BENCH_dse_small.json").write_text(json.dumps(snap()))
+    # 0.6x the recorded rate passes the 0.5 default...
+    baseline.assert_baseline(live(600.0, 1200.0), budget="small",
+                             out_dir=tmp_path)
+    # ...but breaches once the env tightens the floor to 0.8
+    monkeypatch.setenv("BENCH_BASELINE_TOL", "0.8")
+    with pytest.raises(AssertionError):
+        baseline.assert_baseline(live(600.0, 1200.0), budget="small",
+                                 out_dir=tmp_path)
+
+
+def test_assert_baseline_cross_budget_scales_tolerance(tmp_path):
+    # only the FULL snapshot exists: a small-budget run gets the
+    # CROSS_BUDGET_FACTOR headroom (0.5 * 0.5 = 0.25 floor)...
+    (tmp_path / "BENCH_dse.json").write_text(json.dumps(snap(budget="full")))
+    baseline.assert_baseline(live(300.0, 700.0), budget="small",
+                             out_dir=tmp_path)
+    # ...which still catches a deep regression
+    with pytest.raises(AssertionError):
+        baseline.assert_baseline(live(100.0, 200.0), budget="small",
+                                 out_dir=tmp_path)
+
+
+def test_guard_enabled_env_and_budget(monkeypatch):
+    monkeypatch.delenv("BENCH_BASELINE_GUARD", raising=False)
+    assert baseline.guard_enabled("small") is True
+    assert baseline.guard_enabled("full") is False
+    monkeypatch.setenv("BENCH_BASELINE_GUARD", "1")
+    assert baseline.guard_enabled("full") is True
+    monkeypatch.setenv("BENCH_BASELINE_GUARD", "0")
+    assert baseline.guard_enabled("small") is False
+
+
+# -- the acceptance check: injected 2x slowdown vs the REAL snapshot --------
+
+def test_injected_2x_slowdown_fails_against_checked_in_snapshot():
+    """The acceptance criterion, against the actual recorded trajectory:
+    synthesize a live run at 0.49x the checked-in throughput (a 2x
+    slowdown as any real regression plus jitter would measure) and
+    assert the guard breaches; at 1.0x it must pass."""
+    recorded = baseline.load_baseline("dse", "small")
+    assert recorded is not None, "BENCH_dse*.json must be checked in"
+    by_name = {r["name"]: r["metrics"]["configs_per_s"]
+               for r in recorded["rows"]
+               if r["name"] in baseline.GUARDED_ROWS}
+    assert set(by_name) == set(baseline.GUARDED_ROWS)
+    ok = live(by_name["dse/packed"], by_name["network/matrix"])
+    slow = live(by_name["dse/packed"] * 0.49,
+                by_name["network/matrix"] * 0.49)
+    assert baseline.check_rows(ok, recorded) == []
+    problems = baseline.check_rows(slow, recorded)
+    assert any("dse/packed" in p for p in problems)
+
+
+def test_bench_dse_run_is_wired_to_the_guard(monkeypatch, tmp_path):
+    """End-to-end wiring: ``bench_dse.run`` with stubbed measurement
+    stages must call the guard and abort when the packed row comes in
+    2x slow against the snapshot."""
+    from benchmarks import bench_dse
+
+    (tmp_path / "BENCH_dse_small.json").write_text(json.dumps(snap()))
+    monkeypatch.setenv("BENCH_BUDGET", "small")
+    monkeypatch.setenv("BENCH_BASELINE_GUARD", "1")
+    monkeypatch.setattr(baseline, "REPO_ROOT", tmp_path)
+
+    def stub(rows_out):
+        def _run(rows):
+            rows.extend(rows_out)
+        return _run
+
+    for stage in ("_bench_single", "_bench_matrix", "_bench_depth",
+                  "_bench_gradient"):
+        monkeypatch.setattr(bench_dse, stage, stub([]))
+    monkeypatch.setattr(bench_dse, "_bench_network", stub(live(packed=400.0)))
+    with pytest.raises(AssertionError, match="dse/packed"):
+        bench_dse.run([])
+    monkeypatch.setattr(bench_dse, "_bench_network", stub(live()))
+    bench_dse.run([])                  # healthy rows pass

@@ -222,6 +222,105 @@ def test_pareto_front_keeps_exactly_one_of_duplicates(objs):
         assert i == first, (i, first)
 
 
+# ---------------------------------------------------------------------------
+# micro-batcher contract (repro.serve.batcher)
+# ---------------------------------------------------------------------------
+
+from repro.serve.batcher import MicroBatcher, plan_batches  # noqa: E402
+
+
+@given(st.integers(0, 200), st.integers(1, 17))
+@settings(**SETTINGS)
+def test_plan_batches_is_a_greedy_fifo_partition(n, k):
+    plan = plan_batches(n, k)
+    flat = [i for s, e in plan for i in range(s, e)]
+    assert flat == list(range(n))                 # tiles [0, n) exactly
+    assert all(1 <= e - s <= k for s, e in plan)  # bounded windows
+    assert all(e - s == k for s, e in plan[:-1])  # only the tail is short
+
+
+@given(st.lists(st.integers(0, 9), min_size=0, max_size=40),
+       st.integers(1, 7))
+@settings(max_examples=20, deadline=None)
+def test_microbatcher_dispatches_partition_the_query_set(items, k):
+    """Every submitted item lands in exactly one dispatch — no drop, no
+    dup — batches are contiguous in arrival order and bounded, and each
+    result lands on ITS submitter's future."""
+    def dispatch(batch):
+        return [x * 10 + 1 for x in batch]
+
+    mb = MicroBatcher(dispatch, max_batch=k, window_s=0.0)
+    try:
+        futs = [mb.submit(x) for x in items]
+        results = [f.result(timeout=30.0) for f in futs]
+        mb.drain()
+        assert results == [x * 10 + 1 for x in items]
+        seqs = [s for b in mb.dispatch_log for s in b]
+        assert seqs == list(range(len(items)))    # partition, FIFO-contiguous
+        assert all(1 <= len(b) <= k for b in mb.dispatch_log)
+    finally:
+        mb.close()
+
+
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=24),
+       st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_microbatcher_answers_invariant_to_interleaving(items, k, seed):
+    """Stage random burst patterns with ``hold()`` so batch composition
+    varies per draw: each item's answer is a pure function of the item,
+    never of its batchmates or window shape, and the dispatch log stays
+    a partition under EVERY interleaving."""
+    def dispatch(batch):
+        return [x * x + 1 for x in batch]
+
+    rng = np.random.default_rng(seed)
+    mb = MicroBatcher(dispatch, max_batch=k, window_s=0.0)
+    try:
+        futs = []
+        i = 0
+        while i < len(items):
+            burst = int(rng.integers(1, k + 2))
+            with mb.hold():                        # one staged window
+                for x in items[i: i + burst]:
+                    futs.append(mb.submit(x))
+            i += burst
+        results = [f.result(timeout=30.0) for f in futs]
+        mb.drain()
+        assert results == [x * x + 1 for x in items]
+        assert sorted(s for b in mb.dispatch_log
+                      for s in b) == list(range(len(items)))
+    finally:
+        mb.close()
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=12), st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_microbatcher_exception_fails_exactly_its_batch(flags, k):
+    """A dispatch that raises fails every future in THAT batch and no
+    other; the log still partitions the submissions."""
+    def dispatch(batch):
+        if any(batch):
+            raise RuntimeError("poisoned batch")
+        return [0 for _ in batch]
+
+    mb = MicroBatcher(dispatch, max_batch=k, window_s=0.0)
+    try:
+        futs = [mb.submit(b) for b in flags]
+        mb.drain()
+        assert sorted(s for b in mb.dispatch_log
+                      for s in b) == list(range(len(flags)))
+        for batch in mb.dispatch_log:
+            poisoned = any(flags[s] for s in batch)
+            for s in batch:
+                if poisoned:
+                    with pytest.raises(RuntimeError):
+                        futs[s].result(timeout=30.0)
+                else:
+                    assert futs[s].result(timeout=30.0) == 0
+    finally:
+        mb.close()
+
+
 @given(st.lists(st.integers(0, 255), min_size=1, max_size=60),
        st.integers(1, 4), st.integers(1, 4))
 @settings(**SETTINGS)

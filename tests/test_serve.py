@@ -1,0 +1,295 @@
+"""DSE-as-a-service (``repro.serve``): served answers are byte-equal to
+direct Explorer sweeps, deterministic under concurrency and arbitrary
+micro-batch composition, cache counters transition correctly, and the
+device-sharded evaluator is bitwise-exact — in-process and under a
+forced 8-host-device subprocess."""
+
+import os
+import pathlib
+import subprocess
+import sys
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.core.aidg.explorer import (Explorer, default_scenarios,
+                                      pareto_front, random_candidates,
+                                      resolve_cells)
+from repro.serve import Answer, Design, DSEService, Query
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# a 4-cell corner of the default matrix: two archs sharing a workload
+# (subset queries bite), one non-gemm workload, one multi-workload arch
+SUBSET = {("oma", "gemm"), ("systolic", "gemm"), ("gamma", "attention"),
+          ("tpu_v5e", "gemm")}
+
+
+@pytest.fixture(scope="module")
+def ex():
+    scs = [s for s in default_scenarios()
+           if (s.arch, s.workload) in SUBSET]
+    assert len(scs) == len(SUBSET)
+    return Explorer(scenarios=scs)
+
+
+@pytest.fixture()
+def svc(ex):
+    s = DSEService(ex, pool=8, seed=1, max_batch=4, window_s=0.01)
+    yield s
+    s.close()
+
+
+def mixed_stream(n=12):
+    """A deterministic mixed client stream over the SUBSET matrix."""
+    base = [Query.make(workload="gemm"),
+            Query.make(workload="gemm", top_k=2),
+            Query.make(workload="attention"),
+            Query.make(workload="gemm", archs=["oma", "systolic"]),
+            Query.make(archs=["gamma"]),
+            Query.make(workload="gemm", overrides={"matrix": 2.0})]
+    return [base[i % len(base)] for i in range(n)]
+
+
+# -- byte-equality vs a direct Explorer sweep -------------------------------
+
+def direct_answer(service, q):
+    """The oracle: re-derive the answer from a DIRECT Explorer sweep of
+    the same candidate block — no service, no batching, no cache —
+    mirroring the documented ranking pipeline independently."""
+    ex = service.explorer
+    cand = service.pool.copy()
+    for name, val in q.overrides:
+        cand[:, ex.space.names.index(name)] = val
+    cycles = ex.evaluate(cand)
+    cols = np.asarray(resolve_cells(ex.compiled, workload=q.workload,
+                                    archs=q.archs))
+    names = tuple(ex.compiled[i].name for i in cols)
+    rel = cycles[:, cols] / ex.baselines[None, cols]
+    latency = rel.mean(axis=1)
+    cost = ex.cost_proxy(cand)
+    top = pareto_front(np.stack([latency, cost], axis=1))[: q.top_k]
+    designs = tuple(
+        Design(theta=tuple(float(v) for v in cand[i]),
+               latency=float(latency[i]), cost=float(cost[i]),
+               cycles=tuple(float(c) for c in cycles[i, cols]))
+        for i in top)
+    lead = int(top[0]) if len(top) else int(np.argmin(latency))
+    best_arch = ex.compiled[int(cols[int(np.argmin(rel[lead]))])].arch
+    return Answer(query=q, cells=names, designs=designs,
+                  best_arch=best_arch)
+
+
+def test_served_equals_direct_sweep(svc):
+    for q in {q.key: q for q in mixed_stream()}.values():
+        assert svc.query(q) == direct_answer(svc, q)
+
+
+def test_answer_shape(svc):
+    a = svc.query(workload="gemm", archs=["oma"], top_k=2)
+    assert a.cells == ("oma/gemm",)
+    assert a.best_arch == "oma"
+    assert 1 <= len(a.designs) <= 2
+    assert a.best is a.designs[0]
+    d = a.best
+    assert len(d.theta) == svc.space.n and len(d.cycles) == len(a.cells)
+    assert d.knobs(svc.space.names)["matrix"] == d.theta[
+        svc.space.names.index("matrix")]
+
+
+# -- determinism under concurrency ------------------------------------------
+
+def test_threaded_equals_sequential_replay(ex):
+    stream = mixed_stream(18)
+    svc = DSEService(ex, pool=8, seed=1, max_batch=3, window_s=0.002)
+    try:
+        with ThreadPoolExecutor(max_workers=6) as tp:
+            threaded = list(tp.map(svc.query, stream))
+    finally:
+        svc.close()
+    ref = DSEService(ex, pool=8, seed=1, max_batch=3)
+    try:
+        replay = ref.query_many(stream)
+    finally:
+        ref.close()
+    assert threaded == replay
+
+
+def test_answers_invariant_to_batch_composition(ex):
+    """The same query answered through windows of 1, through a full
+    window, and coalesced with strangers — all byte-equal."""
+    q = Query.make(workload="gemm", top_k=3)
+    got = []
+    for max_batch, stream in [(1, [q]),
+                              (4, [q] * 4),
+                              (4, mixed_stream(7) + [q])]:
+        s = DSEService(ex, pool=8, seed=1, max_batch=max_batch)
+        try:
+            got.append(s.query_many(stream)[-1])
+        finally:
+            s.close()
+    assert got[0] == got[1] == got[2]
+
+
+# -- micro-batch window boundaries ------------------------------------------
+
+@pytest.mark.parametrize("m,expected", [(1, [1]), (4, [4]), (6, [4, 2])])
+def test_window_boundaries(ex, m, expected):
+    """Staged windows split exactly like ``plan_batches``: 1 query, a
+    full window (k = max_batch), and an overflowing one (> k)."""
+    svc = DSEService(ex, pool=8, seed=1, max_batch=4, window_s=0.005)
+    try:
+        with svc.batcher.hold():
+            futs = [svc.submit(workload="gemm", top_k=i + 1)
+                    for i in range(m)]
+        answers = [f.result(timeout=60.0) for f in futs]
+        assert [len(w) for w in svc.window_log] == expected
+        assert [len(b) for b in svc.batcher.dispatch_log] == expected
+        # arrival order survives batching: answer i is for top_k = i+1
+        assert [len(a.designs) <= i + 1 for i, a in enumerate(answers)]
+        assert [a.query.top_k for a in answers] == list(range(1, m + 1))
+    finally:
+        svc.close()
+
+
+# -- cache counters ----------------------------------------------------------
+
+def test_cache_counter_transitions(svc):
+    q = Query.make(workload="attention")
+    a1 = svc.query(q)
+    assert svc.cache_stats == {"hits": 0, "misses": 1, "coalesced": 0}
+    assert a1.cached is False
+
+    a2 = svc.query(q)
+    assert svc.cache_stats == {"hits": 1, "misses": 1, "coalesced": 0}
+    assert a2.cached is True
+    assert a1 == a2                    # cached flag excluded from equality
+
+    # two identical queries in ONE held window: 1 miss + 1 coalesced
+    with svc.batcher.hold():
+        f1 = svc.submit(workload="gemm")
+        f2 = svc.submit(workload="gemm")
+    r1, r2 = f1.result(60.0), f2.result(60.0)
+    assert svc.cache_stats == {"hits": 1, "misses": 2, "coalesced": 1}
+    assert r1 == r2
+    # the window evaluated the key once
+    assert svc.evaluated_log[-1] == [Query.make(workload="gemm").key]
+
+    st = svc.stats()
+    assert st["hit_ratio"] == pytest.approx(2 / 4)
+    assert st["device_dispatches"] == 2 and st["windows"] == 3
+
+
+def test_cached_answers_skip_the_device(svc):
+    q = Query.make(workload="gemm", top_k=2)
+    svc.query(q)
+    before = svc.dispatched_candidates
+    assert before == svc.pool.shape[0]
+    for _ in range(3):
+        assert svc.query(q).cached is True
+    assert svc.dispatched_candidates == before
+
+
+# -- validation fails fast, in the caller -----------------------------------
+
+def test_bad_queries_fail_fast(svc):
+    with pytest.raises(KeyError, match="workload"):
+        svc.query(workload="nope")
+    with pytest.raises(KeyError, match="arch"):
+        svc.query(archs=["nope"])
+    with pytest.raises(KeyError, match="knob"):
+        svc.query(workload="gemm", overrides={"bogus": 1.0})
+    with pytest.raises(ValueError, match="outside"):
+        svc.query(workload="gemm", overrides={"matrix": 1e9})
+    with pytest.raises(ValueError, match="top_k"):
+        Query.make(top_k=0)
+    # a poisoned window would have broken the NEXT query — it doesn't
+    assert svc.query(workload="gemm").best_arch in {"oma", "systolic",
+                                                    "gamma", "tpu_v5e"}
+
+
+def test_query_canonicalization():
+    a = Query.make(workload="gemm", archs=["b", "a"],
+                   overrides={"y": 2.0, "x": 1.0})
+    b = Query.make(workload="gemm", archs=("a", "b"),
+                   overrides=[("x", 1.0), ("y", 2.0)])
+    assert a == b and a.key == b.key and hash(a) == hash(b)
+    assert Query.make(archs="oma").archs == ("oma",)
+    assert a.override_map == {"x": 1.0, "y": 2.0}
+
+
+# -- sharded evaluation -------------------------------------------------------
+
+def test_sharded_exact_in_process(ex):
+    """θ = 1 and random batches: the sharded path is bitwise-equal to
+    single-device under whatever device count this process has
+    (typically 1 — the 8-device case runs in the subprocess test)."""
+    pm = ex.packed_matrix()
+    theta1 = np.ones((1, ex.space.n), np.float32)
+    assert np.array_equal(ex.evaluate(theta1, sharded=True),
+                          ex.evaluate(theta1))
+    cand = random_candidates(ex.space, 8, seed=3)
+    assert np.array_equal(pm.evaluate(cand, sharded=True),
+                          pm.evaluate(cand))
+    assert np.array_equal(ex.evaluate(cand, sharded=True, chunk=3),
+                          ex.evaluate(cand))
+
+
+def test_sharded_service_matches_unsharded(ex):
+    plain = DSEService(ex, pool=8, seed=1)
+    shard = DSEService(ex, pool=8, seed=1, sharded=True)
+    try:
+        q = Query.make(workload="gemm")
+        assert plain.query(q) == shard.query(q)
+    finally:
+        plain.close()
+        shard.close()
+
+
+def test_sharded_device_count_validation(ex):
+    import jax
+
+    pm = ex.packed_matrix()
+    avail = jax.local_device_count()
+    assert pm.n_shards(None) == avail
+    with pytest.raises(ValueError, match="n_devices"):
+        pm.n_shards(0)
+    with pytest.raises(ValueError, match="n_devices"):
+        pm.n_shards(avail + 1)
+
+
+SHARD_SCRIPT = r"""
+import numpy as np, jax
+assert jax.local_device_count() == 8, jax.local_device_count()
+from repro.core.aidg.explorer import (Explorer, default_scenarios,
+                                      random_candidates)
+scs = [s for s in default_scenarios()
+       if (s.arch, s.workload) in {("oma", "gemm"), ("gamma", "attention")}]
+ex = Explorer(scenarios=scs)
+pm = ex.packed_matrix()
+assert pm.n_shards(None) == 8
+for B in (16, 13):      # a device multiple AND a padded remainder
+    cand = random_candidates(ex.space, B, seed=0)
+    a, b = pm.evaluate(cand), pm.evaluate(cand, sharded=True)
+    assert a.shape == b.shape == (B, pm.n_cells), (a.shape, b.shape)
+    assert np.array_equal(a, b), np.abs(a - b).max()
+print("SHARDED-EXACT")
+"""
+
+
+def test_sharded_exact_on_eight_forced_devices():
+    """θ-batches on a forced 8-host-device mesh agree bitwise with the
+    single-device path (the flag only applies at jax init, hence the
+    subprocess)."""
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = ((flags + " ") if flags else "") + \
+        "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run([sys.executable, "-c", SHARD_SCRIPT],
+                          env=env, capture_output=True, text=True,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "SHARDED-EXACT" in proc.stdout

@@ -35,6 +35,9 @@ MODULES = [
     "repro.core.network.graph",
     "repro.core.network.lowering",
     "repro.core.network.model",
+    "repro.serve.query",
+    "repro.serve.batcher",
+    "repro.serve.engine",
 ]
 
 
