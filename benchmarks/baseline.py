@@ -46,7 +46,7 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 CROSS_BUDGET_FACTOR = 0.5
 
 # the serving-path rows bench-smoke guards, and the throughput metric
-GUARDED_ROWS = ("dse/packed", "network/matrix")
+GUARDED_ROWS = ("dse/packed", "dse/energy", "network/matrix")
 GUARD_METRIC = "configs_per_s"
 
 

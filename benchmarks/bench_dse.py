@@ -206,6 +206,57 @@ def _bench_packed(rows: List[Dict], ex_wave, cand, wave_cps: float,
         raise AssertionError(
             f"packed matrix engine regressed: {packed_cps:.0f} configs/s "
             f"is under the per-cell wavefront row ({wave_cps:.0f})")
+    _bench_energy(rows, ex_packed, cand, configs)
+
+
+def _bench_energy(rows: List[Dict], ex_packed, cand,
+                  configs: int) -> None:
+    """``dse/energy``: the 3-objective dispatch — (cycles, energy) from
+    the SAME compiled tuple function as the cycles-only path, so adding
+    energy must cost ~nothing.  Also asserts the packed energy (folded
+    through the condensed chains) matches a per-cell recompute from the
+    raw op-class counts at θ = 1, on every cell."""
+    S = len(ex_packed.compiled)
+    B = cand.shape[0]
+
+    def _best_of(fn, reps=3):
+        fn(cand)                       # warm-up (shared compiled kernel)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn(cand)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    dt_c = _best_of(ex_packed.evaluate)
+    dt_e = _best_of(ex_packed.evaluate_full)
+    energy_cps = configs / dt_e
+    overhead = dt_e / dt_c
+
+    # θ = 1 exactness: packed (condensed-chain fold) vs per-cell analytic
+    # recompute from raw op-class counts, every cell
+    theta1 = np.ones((1, ex_packed.space.n), np.float32)
+    c1, e1 = ex_packed.evaluate_full(theta1)
+    edyn, pstat = ex_packed._energy_arrays()
+    e_ref = edyn.sum(axis=1) + pstat * c1[0].astype(np.float64)
+    rel = np.abs(e1[0] - e_ref) / np.maximum(e_ref, 1.0)
+    if rel.max() > 1e-3:
+        k = int(np.argmax(rel))
+        raise AssertionError(
+            f"packed θ=1 energy vs per-cell recompute on "
+            f"{ex_packed.compiled[k].name}: {e1[0, k]:.6g} vs "
+            f"{e_ref[k]:.6g}")
+
+    rows.append({"name": "dse/energy", "us_per_call": dt_e / configs * 1e6,
+                 "derived": (f"cells={S};candidates={B};"
+                             f"objectives=cycles+energy;"
+                             f"configs_per_s={energy_cps:.0f};"
+                             f"overhead_vs_cycles_only={overhead:.3f}x;"
+                             f"max_theta1_relerr={rel.max():.2e}")})
+    if SMALL and overhead > 1.15:
+        raise AssertionError(
+            f"energy objective is no longer free: evaluate_full took "
+            f"{overhead:.2f}x the cycles-only dispatch (floor 1.15x)")
 
 
 def _bench_depth(rows: List[Dict]) -> None:

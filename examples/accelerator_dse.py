@@ -7,7 +7,7 @@ on-chip SRAM, DRAM — multiplicative latency factors) over the FULL scenario
 matrix: 6 modeled architectures x their mapped workloads (GEMM, conv,
 attention, selective-scan, map-reduce), >= 1000 candidates per batch, one
 batched JAX sweep per cached AIDG.  Reports the Pareto frontier of
-(latency, cost/area proxy) and two refinements of the incumbent: classic
+(latency, energy, cost/area proxy) and two refinements of the incumbent: classic
 derivative-free coordinate descent, and gradient descent through the
 smooth max-plus relaxation (the sweep is pure JAX, so the makespan is
 differentiable in the design knobs — batched multi-start projected Adam
@@ -58,20 +58,23 @@ def main():
     print(f"swept in {dt:.2f}s ({thr:.0f} (arch, workload, theta) configs/s, "
           "steady-state)")
 
-    # --- Pareto frontier of (latency, cost) -------------------------------
+    # --- Pareto frontier of (latency, energy, cost) -----------------------
     print(f"\nPareto frontier ({len(res.pareto)} non-dominated designs, "
-          "latency = mean baseline-relative cycles, cost = area proxy):")
+          "latency = mean baseline-relative cycles, energy = mean "
+          "baseline-relative energy, cost = area proxy):")
     frontier = res.frontier()
     step = max(1, len(frontier) // 8)
     for row in frontier[::step]:
         thetas = ", ".join(f"{n}x{row[f'theta[{n}]']:.2f}"
                            for n in ex.space.names)
-        print(f"  latency {row['latency']:.3f}  cost {row['cost']:6.2f}  "
+        print(f"  latency {row['latency']:.3f}  "
+              f"energy {row['energy']:.3f}  cost {row['cost']:6.2f}  "
               f"[{thetas}]")
 
     i = res.best
     print(f"\nbest latency*cost compromise (candidate {i}): "
-          f"latency {res.latency[i]:.3f}, cost {res.cost[i]:.2f}")
+          f"latency {res.latency[i]:.3f}, energy {res.energy[i]:.3f}, "
+          f"cost {res.cost[i]:.2f}")
     per_scn = ", ".join(f"{n}={c:.0f}" for n, c in zip(names, res.cycles[i]))
     print(f"  cycles: {per_scn}")
 
@@ -130,6 +133,31 @@ def main():
     print(f"  olmo-1b on tpu_v5e: sequential {s:.3e} cycles, "
           f"pipelined {p:.3e} ({100 * (1 - p / s):.0f}% hidden by "
           f"double-buffered overlap)")
+
+    # --- energy as a co-equal objective -----------------------------------
+    # every architecture carries per-op-class pJ coefficients (per-tech-node
+    # tables); the packed dispatch returns (cycles, energy) together, so
+    # energy-targeted co-design reuses the same compiled kernel
+    from repro.core.aidg.energy import energy_bottleneck_report
+    from repro.core.archs.energy import energy_model
+
+    eres = GradientExplorer(nex, objective="edp").refine(starts=2, steps=10)
+    eref = nex.explore(eres.theta[None, :])
+    print(f"\nenergy-delay co-design on the network matrix -> "
+          f"latency {eref.latency[0]:.3f}, energy {eref.energy[0]:.3f}, "
+          f"cost {eref.cost[0]:.2f}")
+    print("  theta:", {n: round(float(v), 3)
+                       for n, v in zip(nex.space.names, eres.theta)})
+
+    # where do the joules go?  storage-node traffic x per-level access
+    # energy, grouped by storage class (the ZigZag-style breakdown)
+    em = energy_model("tpu_v5e")
+    print(f"  memory-level energy bottlenecks, olmo-1b on tpu_v5e "
+          f"({em.tech_nm} nm tables):")
+    for row in energy_bottleneck_report(seq):
+        print(f"    {row['storage_class']:7s} {row['words']:.3e} words "
+              f"x {row['pj_per_word']:7.1f} pJ = "
+              f"{row['energy_pj']:.3e} pJ ({100 * row['share']:.0f}%)")
 
 
 if __name__ == "__main__":

@@ -446,14 +446,22 @@ class PackSpec:
     run_reps: np.ndarray         # (R,) float
     fits_within: np.ndarray      # (R,) float 0/1 (0 = no overlap credited)
     fits_between: np.ndarray     # (R-1,) float 0/1
+    # energy objective (optional — zero when absent): per-problem folded
+    # dynamic pJ per knob (repro.core.aidg.energy.fold_dyn_energy, each
+    # (n_knobs + 1,)) and the cell's static leakage pJ per cycle
+    edyn: Tuple[np.ndarray, ...] = ()
+    static_pj: float = 0.0
 
     @staticmethod
-    def operator(problem: DSEProblem, projection) -> "PackSpec":
+    def operator(problem: DSEProblem, projection, edyn=None,
+                 static_pj: float = 0.0) -> "PackSpec":
         """The single-problem spec of an operator cell."""
         return PackSpec((problem,), (tuple(projection),),
                         np.zeros(1, np.int64), np.zeros(1, np.int64),
                         np.ones(1, np.float32), np.zeros(1, np.float32),
-                        np.zeros(0, np.float32))
+                        np.zeros(0, np.float32),
+                        () if edyn is None else (np.asarray(edyn),),
+                        float(static_pj))
 
 
 @dataclass
@@ -772,6 +780,10 @@ class PackedMatrix:
         reps = np.zeros((CL, RU), np.float32)
         fw = np.zeros((CL, RU), np.float32)
         fb = np.zeros((CL, max(1, RU - 1)), np.float32)
+        # per-cell dynamic-energy knob vectors: Σ_runs reps · edyn[layer]
+        # (energy is work — overlap shortens the makespan, not the joules)
+        edyn_c = np.zeros((CL, self.n_knobs + 1), np.float64)
+        pstat = np.zeros((CL,), np.float64)
         for ci, spec in enumerate(self.specs):
             nr = len(spec.run_layer)
             runs[ci, :nr] = np.asarray(self.row_of[ci])[spec.run_layer]
@@ -779,11 +791,18 @@ class PackedMatrix:
             fw[ci, :nr] = spec.fits_within
             if nr > 1:
                 fb[ci, : nr - 1] = spec.fits_between
+            if spec.edyn:
+                for li, r in zip(spec.run_layer, spec.run_reps):
+                    edyn_c[ci] += float(r) * np.asarray(spec.edyn[int(li)],
+                                                        np.float64)
+            pstat[ci] = spec.static_pj
 
         J = jnp.asarray
         self._arrays = dict(
             buckets=bucket_arrays, inv=J(inv), RU=RU,
-            runs=J(runs), reps=J(reps), fw=J(fw), fb=J(fb))
+            runs=J(runs), reps=J(reps), fw=J(fw), fb=J(fb),
+            edyn=J(edyn_c.astype(np.float32)),
+            pstat=J(pstat.astype(np.float32)))
         return self._arrays
 
     # -- the traced evaluator ----------------------------------------------
@@ -923,10 +942,14 @@ class PackedMatrix:
         return fn
 
     def _matrix_fn(self, soft: bool):
-        """knobs (K,) [, tau] -> per-cell cycles (S,), fully traced: one
-        vmapped wavefront fixed point per shape bucket (all inside the one
-        trace), bucket outputs re-ordered to global rows, then the
-        run-length composition per cell."""
+        """knobs (K,) [, tau] -> per-cell ``(cycles (S,), energy (S,))``,
+        fully traced: one vmapped wavefront fixed point per shape bucket
+        (all inside the one trace), bucket outputs re-ordered to global
+        rows, then the run-length composition per cell.  The energy
+        objective rides the SAME trace — one pre-folded matvec
+        ``edyn @ (1/θ)`` plus the static term ``P_static · cycles`` — so a
+        3-objective evaluation is still a single dispatch with no second
+        pass."""
         A = self._build_arrays()
 
         def bucket_args(BA):
@@ -940,6 +963,7 @@ class PackedMatrix:
                       for BA in A["buckets"]]
         inv = A["inv"]
         runs, reps, fw, fb = A["runs"], A["reps"], A["fw"], A["fb"]
+        edyn, pstat = A["edyn"], A["pstat"]
         RU = A["RU"]
 
         def fn(knobs, tau):
@@ -962,22 +986,33 @@ class PackedMatrix:
                 between = (clip(pr[:, 1:], mr[:, :-1]) * fb).sum(axis=-1)
             else:
                 between = 0.0
-            return total - within - between
+            cycles = total - within - between
+            # DVFS-style dynamic term (faster units burn more pJ per op)
+            # plus leakage over the makespan — analytic in θ, and the
+            # static part differentiates through the soft makespan
+            energy = edyn @ (1.0 / kn) + pstat * cycles
+            return cycles, energy
 
         return fn
 
     # -- public evaluation surface -----------------------------------------
 
-    def evaluate_fn(self) -> Callable:
-        """Cached ``jit(vmap)`` hard evaluator:
-        ``fn(knobs (B, K)) -> (B, S) cycles`` — the whole matrix in one
-        dispatch."""
+    def _full_fn(self) -> Callable:
+        """Cached ``jit(vmap)`` hard evaluator of the FULL objective tuple:
+        ``fn(knobs (B, K)) -> ((B, S) cycles, (B, S) energy pJ)`` — the
+        whole matrix in one dispatch, energy in the same trace."""
         fn = self._compiled.get("hard")
         if fn is None:
             f = self._matrix_fn(soft=False)
             fn = jax.jit(jax.vmap(lambda k: f(k, jnp.float32(1.0))))
             self._compiled["hard"] = fn
         return fn
+
+    def evaluate_fn(self) -> Callable:
+        """The cycles-only view of :meth:`_full_fn`:
+        ``fn(knobs (B, K)) -> (B, S) cycles`` (same compiled dispatch)."""
+        full = self._full_fn()
+        return lambda kt: full(kt)[0]
 
     def n_shards(self, n_devices: Optional[int] = None) -> int:
         """Devices the sharded evaluator spreads the candidate axis over:
@@ -994,13 +1029,14 @@ class PackedMatrix:
 
     def sharded_fn(self, n_devices: Optional[int] = None) -> Callable:
         """Cached device-sharded hard evaluator: ``fn(knobs (B, K)) ->
-        (B, S)`` with the CANDIDATE axis split across ``n_shards``
-        devices via ``shard_map`` (``pmap`` fallback on JAX builds without
-        it) — each device runs the same vmapped packed evaluator over its
-        B/D slice, so results are bitwise identical to the single-device
-        path (per-candidate rows are independent; asserted by
-        ``tests/test_serve.py``).  B must be a multiple of the device
-        count — ``evaluate(sharded=True)`` pads for you."""
+        ((B, S) cycles, (B, S) energy)`` with the CANDIDATE axis split
+        across ``n_shards`` devices via ``shard_map`` (``pmap`` fallback
+        on JAX builds without it) — each device runs the same vmapped
+        packed evaluator over its B/D slice, so results are bitwise
+        identical to the single-device path (per-candidate rows are
+        independent; asserted by ``tests/test_serve.py``).  B must be a
+        multiple of the device count — ``evaluate(sharded=True)`` pads
+        for you."""
         D = self.n_shards(n_devices)
         key = ("sharded", D)
         fn = self._compiled.get(key)
@@ -1014,14 +1050,14 @@ class PackedMatrix:
                 mesh = Mesh(np.asarray(devices), ("cand",))
                 fn = jax.jit(shard_map(batched, mesh=mesh,
                                        in_specs=P("cand"),
-                                       out_specs=P("cand")))
+                                       out_specs=(P("cand"), P("cand"))))
             except ImportError:       # pre-shard_map JAX: explicit pmap
                 pfn = jax.pmap(batched, devices=devices)
 
                 def fn(kt, _pfn=pfn, _D=D):
                     B = kt.shape[0]
-                    out = _pfn(kt.reshape(_D, B // _D, kt.shape[1]))
-                    return out.reshape(B, -1)
+                    c, en = _pfn(kt.reshape(_D, B // _D, kt.shape[1]))
+                    return c.reshape(B, -1), en.reshape(B, -1)
             self._compiled[key] = fn
         return fn
 
@@ -1036,12 +1072,24 @@ class PackedMatrix:
         (``sharded_fn``) for near-linear multi-device throughput with
         bitwise-identical results; the batch is padded with θ = 1 rows up
         to a device multiple and sliced back."""
+        return self.evaluate_full(knob_thetas, chunk=chunk, sharded=sharded,
+                                  n_devices=n_devices)[0]
+
+    def evaluate_full(self, knob_thetas: np.ndarray,
+                      chunk: Optional[int] = None, sharded: bool = False,
+                      n_devices: Optional[int] = None
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """(B, n_knobs) candidates -> ``((B, S) cycles, (B, S) energy
+        pJ)``, both objectives from the SAME compiled dispatch (energy is
+        one folded matvec plus the static term inside the latency trace —
+        see :meth:`_matrix_fn`); cells built without energy coefficients
+        report 0.  Options as :meth:`evaluate`."""
         if sharded:
             mult = self.n_shards(n_devices)
             fn = self.sharded_fn(mult)
         else:
             mult = 1
-            fn = self.evaluate_fn()
+            fn = self._full_fn()
         kt = jnp.asarray(np.atleast_2d(np.asarray(knob_thetas, np.float32)))
         B = kt.shape[0]
 
@@ -1051,17 +1099,19 @@ class PackedMatrix:
             if n < rows:
                 block = jnp.concatenate(
                     [block, jnp.ones((rows - n, kt.shape[1]), jnp.float32)])
-            return np.asarray(fn(block))[:n]
+            c, en = fn(block)
+            return np.asarray(c)[:n], np.asarray(en)[:n]
 
         up = lambda n: -(-n // mult) * mult   # round up to device multiple
         if chunk is None or B <= chunk:
             return run(kt, up(B))
         step = up(chunk)
-        out = np.empty((B, self.n_cells), dtype=np.float32)
+        out_c = np.empty((B, self.n_cells), dtype=np.float32)
+        out_e = np.empty((B, self.n_cells), dtype=np.float32)
         for s in range(0, B, step):
             e = min(s + step, B)
-            out[s:e] = run(kt[s:e], step)
-        return out
+            out_c[s:e], out_e[s:e] = run(kt[s:e], step)
+        return out_c, out_e
 
     def grad_fn(self, baselines: np.ndarray) -> Callable:
         """Cached ``jit(vmap(value_and_grad))`` over the soft family:
@@ -1075,9 +1125,37 @@ class PackedMatrix:
             bl = jnp.asarray(baselines, jnp.float32)
 
             def val(knobs, tau):
-                return (f(knobs, tau) / bl).mean()
+                return (f(knobs, tau)[0] / bl).mean()
 
             fn = jax.jit(jax.vmap(jax.value_and_grad(val),
                                   in_axes=(0, None)))
+            self._compiled[key] = fn
+        return fn
+
+    def grad3_fn(self, baselines: np.ndarray,
+                 energy_baselines: np.ndarray) -> Callable:
+        """Cached multi-objective gradient dispatch over the soft family:
+        ``fn(knobs (B, K), tau) -> (values (B, 2), jacobian (B, 2, K))``
+        where row 0 is mean normalized latency and row 1 mean normalized
+        energy — one ``jacrev`` through the shared soft trace, so the
+        energy gradient (analytic ``-edyn_k/θ_k²`` plus the static term
+        through the soft makespan) costs no extra dispatch."""
+        key = ("grad3", np.asarray(baselines, np.float64).tobytes(),
+               np.asarray(energy_baselines, np.float64).tobytes())
+        fn = self._compiled.get(key)
+        if fn is None:
+            f = self._matrix_fn(soft=True)
+            bl = jnp.asarray(baselines, jnp.float32)
+            ebl = jnp.asarray(np.maximum(
+                np.asarray(energy_baselines, np.float64), 1e-30), jnp.float32)
+
+            def vals(knobs, tau):
+                c, en = f(knobs, tau)
+                return jnp.stack([(c / bl).mean(), (en / ebl).mean()])
+
+            def vg(knobs, tau):
+                return vals(knobs, tau), jax.jacrev(vals)(knobs, tau)
+
+            fn = jax.jit(jax.vmap(vg, in_axes=(0, None)))
             self._compiled[key] = fn
         return fn

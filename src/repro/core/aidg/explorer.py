@@ -29,10 +29,12 @@ evaluated in batched JAX calls.  The moving parts:
 * **Candidate generators** — ``grid_candidates``, ``random_candidates``,
   and ``Explorer.refine`` (coordinate descent around the incumbent).
 * **Multi-objective scoring + Pareto frontier** — latency (mean
-  baseline-relative cycles across the matrix) vs. a cost/area proxy
-  (silicon spent speeding a knob up is ∝ the parameter volume the knob
-  governs, divided by θ).  ``pareto_front`` extracts the deterministic
-  non-dominated set.
+  baseline-relative cycles across the matrix) vs. energy (per-op-class
+  dynamic + static coefficients from ``repro.core.archs.energy``, folded
+  into the same dispatch) vs. a cost/area proxy (silicon spent speeding a
+  knob up is ∝ the parameter volume the knob governs, divided by θ).
+  ``pareto_front`` extracts the deterministic non-dominated set over any
+  number of objectives.
 
 Worked example (numbers in ``docs/dse.md``, measured by
 ``benchmarks/bench_dse.py``)::
@@ -55,9 +57,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..acadl.sim import build_trace, simulate
+from ..archs.energy import energy_model
 from .builder import (AIDG, CompiledAIDG, LevelSchedule, build_aidg,
                       condense_aidg, longest_path_fixed_point)
 from .dse import DSEProblem, PackSpec, PackedMatrix, make_problem, sweep
+from .energy import fold_dyn_energy
 from .maxplus import DEFAULT_ENGINE, ENGINES
 
 # the Explorer's engine knob: every per-cell max-plus relaxation, plus the
@@ -295,10 +299,29 @@ class CompiledScenario:
         op_idx, st_idx = proj
         return grad_sweep(self.problem, op_idx, st_idx, n_iters=n_iters)
 
-    def pack_spec(self, proj) -> PackSpec:
+    def energy_coeffs(self, space: "DesignSpace", proj
+                      ) -> Tuple[np.ndarray, float]:
+        """This cell's folded energy coefficients: ``((n_knobs + 1,)``
+        dynamic pJ per knob at θ = 1, static leakage pJ per cycle) — the
+        same fold the packed trace consumes, usable analytically by the
+        per-cell engines (energy given cycles is closed-form)."""
+        model = energy_model(self.arch)
+        return (fold_dyn_energy(self.problem, proj, space.n, model),
+                model.static_pj)
+
+    def pack_spec(self, proj, n_knobs: Optional[int] = None) -> PackSpec:
         """This cell's :class:`repro.core.aidg.dse.PackSpec` — a single
-        problem, one run of one repetition, no overlap gates."""
-        return PackSpec.operator(self.problem, proj)
+        problem, one run of one repetition, no overlap gates.  With
+        ``n_knobs`` the spec carries the folded energy coefficients (the
+        packed evaluator's 3-objective dispatch); without, energy is
+        omitted (reported as 0)."""
+        if n_knobs is None:
+            return PackSpec.operator(self.problem, proj)
+        model = energy_model(self.arch)
+        return PackSpec.operator(
+            self.problem, proj,
+            edyn=fold_dyn_energy(self.problem, proj, n_knobs, model),
+            static_pj=model.static_pj)
 
     def simulate(self) -> int:
         """Cycle-accurate oracle: rebuild the AG from scratch (the builder's
@@ -479,17 +502,24 @@ def grid_candidates(space: DesignSpace, points: int = 4) -> np.ndarray:
 
 
 def pareto_front(objectives: np.ndarray) -> np.ndarray:
-    """Indices of the non-dominated rows of a (B, 2) minimization problem,
-    sorted by the first objective.  Deterministic: ties broken by original
-    row order (stable lexsort); exact duplicates keep the first row only.
+    """Indices of the non-dominated rows of a (B, M >= 2) minimization
+    problem, sorted by the first objective.  Deterministic: ties broken by
+    original row order (stable lexsort); exact duplicates keep the first
+    row only.
 
     Rows with NaN/inf objectives are ignored with a warning: NaN breaks the
     lexsort's ordering contract and an inf-latency row could otherwise be
     "non-dominated" purely by having the smallest cost — a diverged sweep
     (θ outside the evaluator's stable range) must not corrupt the frontier.
+
+    The sweep visits rows in lexicographic order (first objective primary),
+    keeping a row unless some already-kept row weakly dominates it (<= in
+    every objective) — in sorted order a kept row can never be dominated by
+    a later one, so one pass suffices; on 2-objective input this reduces to
+    the classic best-so-far scan bit-for-bit.
     """
     objs = np.asarray(objectives, np.float64)
-    assert objs.ndim == 2 and objs.shape[1] == 2
+    assert objs.ndim == 2 and objs.shape[1] >= 2
     finite = np.isfinite(objs).all(axis=1)
     if not finite.all():
         warnings.warn(
@@ -499,13 +529,15 @@ def pareto_front(objectives: np.ndarray) -> np.ndarray:
             return np.zeros(0, dtype=np.int64)
     rows = np.nonzero(finite)[0]
     sub = objs[rows]
-    order = np.lexsort((sub[:, 1], sub[:, 0]))
+    m = sub.shape[1]
+    order = np.lexsort(tuple(sub[:, j] for j in range(m - 1, -1, -1)))
     keep: List[int] = []
-    best1 = np.inf
+    kept: List[int] = []               # positions into sub
     for i in order:
-        if sub[i, 1] < best1:
-            keep.append(int(rows[i]))
-            best1 = sub[i, 1]
+        if any(np.all(sub[j] <= sub[i]) for j in kept):
+            continue
+        keep.append(int(rows[i]))
+        kept.append(i)
     return np.asarray(keep, dtype=np.int64)
 
 
@@ -539,13 +571,15 @@ def resolve_cells(compiled: Sequence, workload: Optional[str] = None,
 @dataclass
 class ExplorationResult:
     """One batched sweep over the matrix: per-candidate cycles per scenario
-    plus the two scalar objectives and their Pareto-optimal subset."""
+    plus the three scalar objectives (latency, energy, area cost) and
+    their Pareto-optimal subset."""
 
     space: DesignSpace
     scenario_names: List[str]
     candidates: np.ndarray      # (B, n_knobs)
     cycles: np.ndarray          # (B, S)
     latency: np.ndarray         # (B,)  mean baseline-relative cycles
+    energy: np.ndarray          # (B,)  mean baseline-relative energy
     cost: np.ndarray            # (B,)  area proxy
     pareto: np.ndarray          # indices into candidates, sorted by latency
 
@@ -555,6 +589,7 @@ class ExplorationResult:
         rows = []
         for i in self.pareto:
             row = {"index": int(i), "latency": float(self.latency[i]),
+                   "energy": float(self.energy[i]),
                    "cost": float(self.cost[i])}
             row.update({f"theta[{n}]": float(self.candidates[i, j])
                         for j, n in enumerate(self.space.names)})
@@ -623,12 +658,15 @@ class Explorer:
             else compile_scenario(s, use_cache) for s in cells]
         self._projections = [cs.projection(space) for cs in self.compiled]
         self._weights: Optional[np.ndarray] = None
+        self._energy_arrays_cache = None
         # normalization denominators from the SAME evaluator the sweeps use
-        # (compiled_sweep at θ = 1), so the baseline candidate's latency is
-        # exactly 1.0 per scenario — CompiledScenario.baseline comes from
-        # the numpy fixed-point pass, whose iteration count/early-stop can
-        # differ by a fraction of a cycle
-        self._baselines = self.evaluate(np.ones((1, space.n), np.float32))[0]
+        # (compiled_sweep at θ = 1), so the baseline candidate's latency
+        # and energy are exactly 1.0 per scenario — CompiledScenario
+        # .baseline comes from the numpy fixed-point pass, whose iteration
+        # count/early-stop can differ by a fraction of a cycle
+        bl, ebl = self.evaluate_full(np.ones((1, space.n), np.float32))
+        self._baselines = bl[0]
+        self._energy_baselines = np.maximum(ebl[0], 1e-30)
 
     @property
     def scenario_names(self) -> List[str]:
@@ -640,6 +678,12 @@ class Explorer:
         """(S,) per-cell cycles at θ = 1 from the same compiled evaluator
         the sweeps use — the latency-normalization denominators."""
         return self._baselines
+
+    @property
+    def energy_baselines(self) -> np.ndarray:
+        """(S,) per-cell energy (pJ) at θ = 1 from the same evaluator —
+        the energy-normalization denominators."""
+        return self._energy_baselines
 
     def level_stats(self) -> List[Dict[str, float]]:
         """Per-scenario level-schedule statistics: node count vs critical
@@ -679,13 +723,27 @@ class Explorer:
 
     def packed_matrix(self) -> PackedMatrix:
         """The matrix-packed single-dispatch evaluator over all cells
-        (built lazily from every cell's ``pack_spec``; cached)."""
+        (built lazily from every cell's ``pack_spec``, energy coefficients
+        folded in; cached)."""
         if self._packed is None:
-            specs = [cs.pack_spec(proj) for cs, proj
+            specs = [cs.pack_spec(proj, n_knobs=self.space.n) for cs, proj
                      in zip(self.compiled, self._projections)]
             self._packed = PackedMatrix.build(specs, self.space.n,
                                               n_iters=self.n_iters)
         return self._packed
+
+    def _energy_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-cell folded energy coefficients ``((S, n_knobs + 1) dynamic
+        pJ per knob, (S,) static pJ per cycle)`` — the analytic
+        energy-given-cycles closure the per-cell engines use (the packed
+        engine carries the same fold inside its trace)."""
+        if self._energy_arrays_cache is None:
+            coeffs = [cs.energy_coeffs(self.space, proj) for cs, proj
+                      in zip(self.compiled, self._projections)]
+            self._energy_arrays_cache = (
+                np.stack([c[0] for c in coeffs]).astype(np.float64),
+                np.asarray([c[1] for c in coeffs], np.float64))
+        return self._energy_arrays_cache
 
     def evaluate(self, knob_thetas: np.ndarray,
                  chunk: Optional[int] = None, sharded: bool = False,
@@ -711,18 +769,44 @@ class Explorer:
                 for cs, proj in zip(self.compiled, self._projections)]
         return np.stack(cols, axis=1)
 
-    def explore(self, knob_thetas: np.ndarray,
-                chunk: Optional[int] = None) -> ExplorationResult:
-        """Evaluate + score + Pareto-extract one candidate batch."""
+    def evaluate_full(self, knob_thetas: np.ndarray,
+                      chunk: Optional[int] = None, sharded: bool = False,
+                      n_devices: Optional[int] = None
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """(B, n_knobs) candidates -> ``((B, S) cycles, (B, S) energy
+        pJ)``.  With the packed engine both objectives come out of the
+        SAME jitted dispatch (``PackedMatrix.evaluate_full`` — no second
+        pass); the per-cell engines apply the identical closed-form
+        ``edyn @ (1/θ) + P_static · cycles`` to their cycles (energy given
+        cycles is analytic, so no extra evaluation there either)."""
         kt = np.asarray(knob_thetas, np.float32)
         if kt.ndim == 1:
             kt = kt[None, :]
-        cycles = self.evaluate(kt, chunk=chunk)
+        if self.engine == "packed":
+            return self.packed_matrix().evaluate_full(
+                kt, chunk=chunk, sharded=sharded, n_devices=n_devices)
+        cycles = self.evaluate(kt, chunk=chunk, sharded=sharded,
+                               n_devices=n_devices)
+        edyn, pstat = self._energy_arrays()
+        inv = 1.0 / np.concatenate(
+            [kt.astype(np.float64), np.ones((kt.shape[0], 1))], axis=1)
+        energy = inv @ edyn.T + pstat[None, :] * cycles.astype(np.float64)
+        return cycles, energy.astype(np.float32)
+
+    def explore(self, knob_thetas: np.ndarray,
+                chunk: Optional[int] = None) -> ExplorationResult:
+        """Evaluate + score + Pareto-extract one candidate batch (three
+        objectives: latency, energy, area cost)."""
+        kt = np.asarray(knob_thetas, np.float32)
+        if kt.ndim == 1:
+            kt = kt[None, :]
+        cycles, energy_pj = self.evaluate_full(kt, chunk=chunk)
         latency = (cycles / self.baselines[None, :]).mean(axis=1)
+        energy = (energy_pj / self.energy_baselines[None, :]).mean(axis=1)
         cost = self.cost_proxy(kt)
-        front = pareto_front(np.stack([latency, cost], axis=1))
+        front = pareto_front(np.stack([latency, energy, cost], axis=1))
         return ExplorationResult(self.space, self.scenario_names, kt, cycles,
-                                 latency, cost, front)
+                                 latency, energy, cost, front)
 
     # -- refinement: coordinate descent or gradient descent -----------------
 
@@ -748,10 +832,12 @@ class Explorer:
         knobs; the gradient budget is ``starts``/``steps``).
 
         ``objective``: 'product' minimizes latency * cost; 'latency'
-        ignores cost (pure speed)."""
-        if objective not in ("product", "latency"):
-            raise ValueError(f"objective must be 'product' or 'latency', "
-                             f"got {objective!r}")
+        ignores cost (pure speed); 'energy' minimizes normalized energy;
+        'edp' minimizes the energy-delay product (latency * energy)."""
+        if objective not in ("product", "latency", "energy", "edp"):
+            raise ValueError(
+                f"objective must be one of 'product', 'latency', 'energy' "
+                f"or 'edp', got {objective!r}")
         if method == "grad":
             if rounds is not None or points is not None:
                 raise TypeError(
@@ -779,7 +865,9 @@ class Explorer:
                 cand = np.repeat(cur[None, :], len(levels), axis=0)
                 cand[:, ki] = levels
                 res = self.explore(cand)
-                score = (res.latency if objective == "latency"
-                         else res.latency * res.cost)
+                score = {"latency": res.latency,
+                         "energy": res.energy,
+                         "edp": res.latency * res.energy,
+                         "product": res.latency * res.cost}[objective]
                 cur = cand[int(np.argmin(score))]
         return cur

@@ -44,7 +44,7 @@ from .explorer import Explorer
 
 __all__ = ["GradientResult", "GradientExplorer"]
 
-OBJECTIVES = ("product", "latency")
+OBJECTIVES = ("product", "latency", "energy", "edp")
 
 
 @dataclass
@@ -73,7 +73,11 @@ class GradientExplorer:
     descent objective is the *log* of the hard score —
     ``log latency + log cost`` for ``objective="product"`` (or just
     ``log latency``) — because the product's two factors move on different
-    scales and the log makes Adam's per-knob steps comparable.
+    scales and the log makes Adam's per-knob steps comparable.  The energy
+    objectives (``"energy"``, ``"edp"`` = energy-delay product) ride the
+    packed 3-objective dispatch (``PackedMatrix.grad3_fn``): the dynamic
+    term's gradient is analytic (``-edyn_k/θ_k²``) and the static term
+    differentiates through the soft makespan, all in the same trace.
     """
 
     def __init__(self, explorer: Explorer, objective: str = "product"):
@@ -84,12 +88,21 @@ class GradientExplorer:
         self.objective = objective
         self.space = explorer.space
         self._baselines = np.asarray(explorer.baselines, np.float64)
+        self._packed3_fn = None
+        if objective in ("energy", "edp") and explorer.engine != "packed":
+            raise ValueError(
+                f"objective {objective!r} needs the packed engine's "
+                f"3-objective dispatch (this explorer uses "
+                f"{explorer.engine!r})")
         if explorer.engine == "packed":
             # ONE cached jit(vmap(value_and_grad)) for the whole matrix:
             # the packed soft evaluator differentiates every cell (operator
             # and end-to-end network compositions alike) in one dispatch
             self._packed_fn = explorer.packed_matrix().grad_fn(
                 self._baselines)
+            if objective in ("energy", "edp"):
+                self._packed3_fn = explorer.packed_matrix().grad3_fn(
+                    self._baselines, explorer.energy_baselines)
             self._fns = None
         else:
             # one cached jit(vmap(value_and_grad)) per cell, built through
@@ -111,6 +124,16 @@ class GradientExplorer:
         temperature τ.  Latency and its gradient come from the per-scenario
         compiled kernels; the cost factor enters analytically."""
         kt = jnp.asarray(np.atleast_2d(knob_thetas), jnp.float32)
+        if self._packed3_fn is not None:
+            v, j = self._packed3_fn(kt, jnp.float32(tau))
+            v = np.asarray(v, np.float64)
+            j = np.asarray(j, np.float64)
+            lat, en = v[:, 0], v[:, 1]
+            dlat, den = j[:, 0, :], j[:, 1, :]
+            if self.objective == "energy":
+                return np.log(en), den / en[:, None]
+            return (np.log(lat) + np.log(en),                 # "edp"
+                    dlat / lat[:, None] + den / en[:, None])
         if self._packed_fn is not None:
             v, g = self._packed_fn(kt, jnp.float32(tau))
             lat = np.asarray(v, np.float64)
@@ -139,8 +162,10 @@ class GradientExplorer:
     def hard_score(self, knob_thetas: np.ndarray) -> np.ndarray:
         """The non-smooth objective every other generator is judged by."""
         res = self.explorer.explore(np.atleast_2d(knob_thetas))
-        return (res.latency * res.cost if self.objective == "product"
-                else res.latency)
+        return {"product": res.latency * res.cost,
+                "latency": res.latency,
+                "energy": res.energy,
+                "edp": res.latency * res.energy}[self.objective]
 
     # -- batched multi-start projected Adam --------------------------------
 

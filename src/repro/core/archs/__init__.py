@@ -15,6 +15,8 @@ from .gamma import GammaComputeTemplate, generate_gamma, make_gamma_ag
 from .eyeriss import EyerissPE, generate_eyeriss, make_eyeriss_ag
 from .plasticine import generate_plasticine, make_plasticine_ag
 from .tpu_v5e import TPU_V5E, generate_tpu_v5e, make_tpu_v5e_ag
+from .energy import (ARCH_TECH_NM, ENERGY_REGISTRY, EnergyModel,
+                     TECH_TABLES, energy_model)
 
 # name -> AG factory, the uniform handle the DSE scenario matrix
 # (repro.core.aidg.explorer) iterates over.  Factories take their
@@ -54,4 +56,6 @@ __all__ = [
     "generate_plasticine", "make_plasticine_ag",
     "TPU_V5E", "generate_tpu_v5e", "make_tpu_v5e_ag",
     "ARCH_REGISTRY", "ARCH_CAPACITY_WORDS",
+    "EnergyModel", "ENERGY_REGISTRY", "ARCH_TECH_NM", "TECH_TABLES",
+    "energy_model",
 ]

@@ -255,16 +255,43 @@ class CompiledNetwork:
         return grad_network_sweep(self.stack, proj, n_iters=n_iters,
                                   mode=self.scenario.mode)
 
-    def pack_spec(self, proj) -> PackSpec:
+    def energy_coeffs(self, space: DesignSpace, proj
+                      ) -> Tuple[np.ndarray, float]:
+        """Folded energy coefficients of the whole network: per-unique-
+        layer dynamic pJ per knob scaled by composed instance counts
+        (energy is work — pipelined overlap shortens the makespan, not
+        the joules), plus the architecture's static pJ per cycle."""
+        from ..archs.energy import energy_model
+        from ..aidg.energy import fold_dyn_energy
+        model = energy_model(self.arch)
+        proj = proj or self.projection(space)
+        edyn = np.zeros(space.n + 1, np.float64)
+        for prob, pr, r in zip(self.stack.problems, proj,
+                               self.reps_per_layer):
+            edyn += float(r) * fold_dyn_energy(prob, pr, space.n, model)
+        return edyn, model.static_pj
+
+    def pack_spec(self, proj, n_knobs: Optional[int] = None) -> PackSpec:
         """This cell's :class:`repro.core.aidg.dse.PackSpec`: the stack's
         unique tile problems plus its run-length composition arrays.
         Sequential cells zero the overlap gates (one composition formula
         serves both modes); pipelined cells keep them, and the prologue
         boundary is passed through so condensation force-keeps the last
-        chain node of every load-only prefix."""
+        chain node of every load-only prefix.  With ``n_knobs`` the spec
+        carries per-unique-layer folded energy coefficients (the packed
+        3-objective dispatch scales them by the run repetitions)."""
         seq = self.scenario.mode == "sequential"
         st = self.stack
         nr = len(st.run_layer)
+        edyn: Tuple[np.ndarray, ...] = ()
+        static_pj = 0.0
+        if n_knobs is not None:
+            from ..archs.energy import energy_model
+            from ..aidg.energy import fold_dyn_energy
+            model = energy_model(self.arch)
+            edyn = tuple(fold_dyn_energy(prob, pr, n_knobs, model)
+                         for prob, pr in zip(st.problems, proj))
+            static_pj = model.static_pj
         return PackSpec(
             problems=tuple(st.problems),
             projections=tuple(tuple(p) for p in proj),
@@ -274,7 +301,8 @@ class CompiledNetwork:
             fits_within=(np.zeros(nr, np.float32) if seq
                          else np.asarray(st.fits_within, np.float32)),
             fits_between=(np.zeros(max(0, nr - 1), np.float32) if seq
-                          else np.asarray(st.fits_between, np.float32)))
+                          else np.asarray(st.fits_between, np.float32)),
+            edyn=edyn, static_pj=static_pj)
 
     def simulate(self) -> float:
         """Event-simulator oracle, composed the same way the estimate is:

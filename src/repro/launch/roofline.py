@@ -17,6 +17,22 @@ loop (scan bodies).
 Caveat (recorded in DESIGN.md §8): XLA:CPU's SPMD partitioner may choose
 different collective algorithms than TPU's, so the collective term is a
 *structural estimate* (bytes over link bandwidth), not a measurement.
+
+HLO text format assumptions (post-optimization HLO, verified against
+jax 0.4.x / XLA:CPU):
+
+- Instruction lines: ``[ROOT] %name = type{layout} op(...), attrs`` — the
+  result type precedes the op name; operands may appear either bare
+  (``dot(%a, %b)``) or with inlined operand types
+  (``dot(f32[2,32,64]{2,1,0} %a, f32[64,64]{1,0} %b)``).  Both forms are
+  accepted; layout suffixes may contain tiling annotations
+  (``{1,0:T(8,128)}``).
+- Computation headers start at column 0 and contain ``{`` plus either
+  ``->`` or a leading ``ENTRY``.
+- While loops carry ``body=%name`` / ``condition=%name`` and, when XLA
+  could infer it, ``backend_config={"known_trip_count":{"n":"N"}}``.
+- Nested calls are reachable via ``calls=``, ``to_apply=``, ``body=`` or
+  ``branch_computations=`` attributes.
 """
 
 from __future__ import annotations
@@ -173,7 +189,10 @@ def parse_dot_flops(hlo: str) -> float:
     trip_re = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
     callee_re = re.compile(r"(?:calls|to_apply|body|branch_computations)="
                            r"\{?%?([\w\.\-]+)")
-    dot_re = re.compile(r"\bdot\(%([\w\.\-]+),\s*%([\w\.\-]+)\)")
+    # operands may carry an inlined ``dtype[dims]{layout}`` prefix
+    # (post-optimization HLO in current XLA) or appear bare (older text)
+    _op = r"(?:\w+\[[0-9,]*\](?:\{[^}]*\})?\s+)?%([\w\.\-]+)"
+    dot_re = re.compile(r"\bdot\(" + _op + r",\s*" + _op + r"\)")
     contract_re = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 
     calls: Dict[str, List[Tuple[str, float]]] = {}

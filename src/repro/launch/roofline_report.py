@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import warnings
 from pathlib import Path
 from typing import Dict, List, Optional
 
@@ -34,9 +35,20 @@ def analyze(rec: Dict) -> Optional[RooflineCell]:
     bodies.  Collectives: the trip-aware HLO parser (per-device bytes).
     """
     ca_flops = rec.get("flops_per_device") or 0.0
-    flops = rec.get("dot_flops_per_device") or ca_flops
+    dot_flops = rec.get("dot_flops_per_device") or 0.0
+    flops = dot_flops or ca_flops
     trip_corr = flops / max(ca_flops, 1.0)
-    hbm = (rec.get("bytes_per_device") or 0.0) * max(1.0, trip_corr)
+    if dot_flops > 0.0 and ca_flops > 0.0 and trip_corr < 1.0 - 1e-6:
+        # the HLO walk can only add trip multiplication on top of what
+        # cost_analysis already counts; undercounting means the parser
+        # missed dots (format drift) — surface it instead of silently
+        # deflating the compute/memory terms.
+        warnings.warn(
+            f"roofline: dot-FLOPs walk ({dot_flops:.3g}) < cost_analysis "
+            f"({ca_flops:.3g}) for {rec.get('arch')}/{rec.get('shape')} — "
+            "HLO parser drift?", RuntimeWarning, stacklevel=2)
+    trip_corr = max(1.0, trip_corr)
+    hbm = (rec.get("bytes_per_device") or 0.0) * trip_corr
     coll = rec.get("collective_bytes_total") or 0.0
     shape = SHAPES[rec["shape"]]
     tokens = (shape.global_batch if shape.mode == "decode"

@@ -135,8 +135,9 @@ class DSEService:
 
     def stats(self) -> Dict[str, object]:
         """Service counters: answer-cache hits/misses/coalesced, dispatch
-        count and mean batch size, total device-evaluated candidates, and
-        the process-wide scenario-cache counters the answer cache
+        count and mean batch size, total device-evaluated candidates, the
+        ranking objectives and per-cell energy baselines (pJ at θ = 1),
+        and the process-wide scenario-cache counters the answer cache
         mirrors."""
         with self._lock:
             cs = dict(self.cache_stats)
@@ -155,6 +156,10 @@ class DSEService:
             "dispatched_candidates": cand,
             "pool": int(self.pool.shape[0]),
             "cells": len(self.explorer.compiled),
+            "objectives": ("latency", "energy", "cost"),
+            "energy_baseline_pj": {
+                cs.name: float(b) for cs, b in zip(
+                    self.explorer.compiled, self.explorer.energy_baselines)},
             "sharded": self.sharded,
             "scenario_cache": scenario_cache_stats(),
         }
@@ -246,9 +251,9 @@ class DSEService:
                     blocks[q.overrides] = self._candidates_for(q)
             sigs = list(blocks)
             stacked = np.concatenate([blocks[s] for s in sigs], axis=0)
-            cycles = self.explorer.evaluate(stacked, chunk=self.chunk,
-                                            sharded=self.sharded,
-                                            n_devices=self.n_devices)
+            cycles, energy = self.explorer.evaluate_full(
+                stacked, chunk=self.chunk, sharded=self.sharded,
+                n_devices=self.n_devices)
             starts = dict(zip(sigs, np.cumsum(
                 [0] + [blocks[s].shape[0] for s in sigs[:-1]])))
             with self._lock:
@@ -257,27 +262,32 @@ class DSEService:
                 for key, q in fresh.items():
                     s = int(starts[q.overrides])
                     block = blocks[q.overrides]
-                    ans = self._rank(q, block, cycles[s: s + block.shape[0]])
+                    ans = self._rank(q, block,
+                                     cycles[s: s + block.shape[0]],
+                                     energy[s: s + block.shape[0]])
                     answers[key] = ans
                     self._cache[key] = ans
 
         return [answers[k] for k in order]
 
-    def _rank(self, q: Query, cand: np.ndarray,
-              cycles: np.ndarray) -> Answer:
+    def _rank(self, q: Query, cand: np.ndarray, cycles: np.ndarray,
+              energy_pj: np.ndarray) -> Answer:
         """Score one query's candidate block over its resolved cell subset
         and extract the Pareto-ranked top-k designs — the same latency /
-        cost / ``pareto_front`` pipeline as ``Explorer.explore``, with
-        latency averaged over the queried cells only."""
+        energy / cost / ``pareto_front`` pipeline as ``Explorer.explore``,
+        with latency and energy averaged over the queried cells only."""
         names, cols = self._resolve(q)
         rel = cycles[:, cols] / self.explorer.baselines[None, cols]
         latency = rel.mean(axis=1)
+        energy = (energy_pj[:, cols]
+                  / self.explorer.energy_baselines[None, cols]).mean(axis=1)
         cost = self.explorer.cost_proxy(cand)
-        front = pareto_front(np.stack([latency, cost], axis=1))
+        front = pareto_front(np.stack([latency, energy, cost], axis=1))
         top = front[: q.top_k]
         designs = tuple(
             Design(theta=tuple(float(v) for v in cand[i]),
-                   latency=float(latency[i]), cost=float(cost[i]),
+                   latency=float(latency[i]), energy=float(energy[i]),
+                   cost=float(cost[i]),
                    cycles=tuple(float(c) for c in cycles[i, cols]))
             for i in top)
         # "which accelerator": the arch whose cell runs the top design at

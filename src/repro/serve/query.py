@@ -90,12 +90,15 @@ class Design:
     its objectives over the query's cell subset.
 
     ``latency`` is the mean baseline-relative cycle count across the
-    queried cells (1.0 = the reference machine); ``cost`` is the area
+    queried cells (1.0 = the reference machine); ``energy`` is the mean
+    baseline-relative energy over the same cells (dynamic switching +
+    static leakage, 1.0 = the reference machine); ``cost`` is the area
     proxy; ``cycles`` are the raw per-cell estimates, aligned with the
     answer's ``cells`` tuple."""
 
     theta: Tuple[float, ...]         # shared knob values, space order
     latency: float                   # mean baseline-relative cycles
+    energy: float                    # mean baseline-relative energy
     cost: float                      # area proxy
     cycles: Tuple[float, ...]        # per queried cell, Answer.cells order
 

@@ -20,24 +20,29 @@ sys.path.insert(0, str(ROOT))
 from benchmarks import baseline  # noqa: E402
 
 
-def snap(packed=1000.0, network=2000.0, budget="small"):
+def snap(packed=1000.0, network=2000.0, energy=1000.0, budget="small"):
     """A synthetic recorded snapshot in the run.py --json shape."""
     return {"section": "dse", "budget": budget, "rows": [
         {"name": "dse/packed", "us_per_call": 1.0,
          "derived": f"configs_per_s={packed}",
          "metrics": {"configs_per_s": packed}},
+        {"name": "dse/energy", "us_per_call": 1.0,
+         "derived": f"configs_per_s={energy}",
+         "metrics": {"configs_per_s": energy}},
         {"name": "network/matrix", "us_per_call": 1.0,
          "derived": f"configs_per_s={network}",
          "metrics": {"configs_per_s": network}},
     ]}
 
 
-def live(packed=1000.0, network=2000.0, extra=()):
+def live(packed=1000.0, network=2000.0, energy=1000.0, extra=()):
     """Synthetic LIVE bench rows (raw ``derived`` strings, as handed to
     the guard by ``bench_dse.run``)."""
     rows = [
         {"name": "dse/packed", "us_per_call": 1.0,
          "derived": f"engine=packed;configs_per_s={packed:.0f}"},
+        {"name": "dse/energy", "us_per_call": 1.0,
+         "derived": f"objectives=cycles+energy;configs_per_s={energy:.0f}"},
         {"name": "network/matrix", "us_per_call": 1.0,
          "derived": f"engine=packed;configs_per_s={network:.0f}"},
     ]
@@ -181,9 +186,11 @@ def test_injected_2x_slowdown_fails_against_checked_in_snapshot():
                for r in recorded["rows"]
                if r["name"] in baseline.GUARDED_ROWS}
     assert set(by_name) == set(baseline.GUARDED_ROWS)
-    ok = live(by_name["dse/packed"], by_name["network/matrix"])
+    ok = live(by_name["dse/packed"], by_name["network/matrix"],
+              energy=by_name["dse/energy"])
     slow = live(by_name["dse/packed"] * 0.49,
-                by_name["network/matrix"] * 0.49)
+                by_name["network/matrix"] * 0.49,
+                energy=by_name["dse/energy"] * 0.49)
     assert baseline.check_rows(ok, recorded) == []
     problems = baseline.check_rows(slow, recorded)
     assert any("dse/packed" in p for p in problems)

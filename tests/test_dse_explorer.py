@@ -101,7 +101,7 @@ def _dominates(a, b):
 def test_pareto_front_is_nondominated(explorer):
     cand = random_candidates(explorer.space, 64, seed=3)
     res = explorer.explore(cand)
-    objs = np.stack([res.latency, res.cost], axis=1)
+    objs = np.stack([res.latency, res.energy, res.cost], axis=1)
     front = set(int(i) for i in res.pareto)
     assert front, "empty frontier"
     for i in front:
@@ -163,6 +163,9 @@ def test_baseline_candidate_has_unit_latency(explorer):
     sweep evaluator."""
     res = explorer.explore(np.ones((1, explorer.space.n), np.float32))
     assert res.latency[0] == pytest.approx(1.0, abs=1e-5)
+    # same self-consistency for the energy objective: the baselines come
+    # from the same evaluate_full the sweep uses
+    assert res.energy[0] == pytest.approx(1.0, abs=1e-5)
 
 
 def test_explore_is_deterministic(explorer):

@@ -1,0 +1,228 @@
+"""Energy/power as first-class DSE objectives
+(repro.core.archs.energy + repro.core.aidg.energy + the packed
+3-objective dispatch):
+
+(a) exactness: the packed engine's in-trace energy equals the per-cell
+    analytic recompute from raw op-class counts on EVERY matrix cell at
+    θ = 1 (and within float tolerance at random θ), and folding through
+    the condensed chains (``CondensedAIDG.op_class_counts``) counts
+    exactly the same instructions as a raw bincount,
+(b) gradients: the energy and energy-delay objectives' analytic/AD
+    gradients match central finite differences,
+(c) the per-memory-level bottleneck report: storage-node traffic x
+    per-level access energy, grouped by storage class, shares summing
+    to one,
+(d) the per-tech-node coefficient tables and classifier regexes.
+"""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.aidg.builder import condense_aidg
+from repro.core.aidg.energy import energy_bottleneck_report, fold_dyn_energy
+from repro.core.aidg.explorer import Explorer
+from repro.core.aidg.gradient import GradientExplorer
+from repro.core.archs.energy import (ARCH_TECH_NM, ENERGY_REGISTRY,
+                                     EnergyModel, TECH_TABLES, energy_model)
+
+
+@pytest.fixture(scope="module")
+def ex():
+    """The full scenario/network matrix on the packed engine."""
+    return Explorer(networks=True)
+
+
+@pytest.fixture(scope="module")
+def ex_op():
+    """Operator cells only (cheap) — for the gradient tests."""
+    return Explorer()
+
+
+# ---------------------------------------------------------------------------
+# (a) exactness: packed == per-cell recompute, condensed fold == raw fold
+# ---------------------------------------------------------------------------
+
+
+def test_packed_energy_matches_per_cell_recompute_on_every_cell(ex):
+    """At θ = 1 the packed dispatch's energy must equal the analytic
+    per-cell closed form  E = Σ_k edyn_k + P_static · T  computed from the
+    RAW per-problem op-class counts (``CompiledScenario.energy_coeffs``
+    folds with ``cond=None``), on every operator AND network cell."""
+    S = len(ex.compiled)
+    assert S >= 10 + 2          # operator matrix + at least some networks
+    theta1 = np.ones((1, ex.space.n), np.float32)
+    c1, e1 = ex.evaluate_full(theta1)
+    edyn, pstat = ex._energy_arrays()
+    e_ref = edyn.sum(axis=1) + pstat * c1[0].astype(np.float64)
+    for k in range(S):
+        assert e1[0, k] == pytest.approx(e_ref[k], rel=1e-4), \
+            ex.compiled[k].name
+    # energy baselines come from the same dispatch: θ = 1 normalizes to 1
+    assert np.allclose(e1[0] / ex.energy_baselines, 1.0, rtol=1e-6)
+
+
+def test_packed_energy_matches_analytic_at_random_theta(ex):
+    """Away from θ = 1 the closed form still holds (counts are
+    θ-independent):  E(θ) = edyn · (1/θ, 1) + P_static · T(θ)."""
+    rng = np.random.default_rng(11)
+    kt = np.exp(rng.uniform(-0.6, 0.6, (4, ex.space.n))).astype(np.float32)
+    cycles, energy = ex.evaluate_full(kt)
+    edyn, pstat = ex._energy_arrays()
+    inv = 1.0 / np.concatenate(
+        [kt.astype(np.float64), np.ones((kt.shape[0], 1))], axis=1)
+    e_ref = inv @ edyn.T + pstat[None, :] * cycles.astype(np.float64)
+    np.testing.assert_allclose(energy, e_ref, rtol=2e-4)
+
+
+def test_condensed_fold_counts_exactly_match_raw_bincount(ex_op):
+    """Absorbed ∪ kept = all nodes: folding the dynamic energy through
+    ``CondensedAIDG.op_class_counts`` + the kept-node bincount gives the
+    SAME integer counts as the raw AIDG bincount, so the two folds are
+    bit-equal (integer arithmetic, identical pJ multipliers)."""
+    for cs, proj in zip(ex_op.compiled, ex_op._projections):
+        model = energy_model(cs.arch)
+        raw = fold_dyn_energy(cs.problem, proj, ex_op.space.n, model)
+        cond = condense_aidg(cs.problem.aidg)
+        via_cond = fold_dyn_energy(cs.problem, proj, ex_op.space.n, model,
+                                   cond=cond)
+        assert np.array_equal(raw, via_cond), cs.name
+        assert raw.sum() > 0.0, cs.name          # every cell burns energy
+
+
+def test_explore_energy_rides_the_same_dispatch(ex_op):
+    """explore() returns the normalized energy objective alongside
+    latency/cost, and faster-than-baseline θ burns MORE dynamic energy
+    (the DVFS-style counter-objective that makes the trade-off real)."""
+    kt = np.stack([np.ones(ex_op.space.n, np.float32),
+                   np.full(ex_op.space.n, 0.5, np.float32)])
+    res = ex_op.explore(kt)
+    assert res.energy.shape == res.latency.shape
+    assert res.energy[0] == pytest.approx(1.0, abs=1e-5)
+    assert res.latency[1] < res.latency[0]       # θ = 0.5: faster...
+    assert res.energy[1] > res.energy[0]         # ...but more joules
+    row = res.frontier()[0]
+    assert "energy" in row
+
+
+# ---------------------------------------------------------------------------
+# (b) energy-objective gradients vs central finite differences
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("objective", ["energy", "edp"])
+def test_energy_gradient_matches_finite_differences(ex_op, objective):
+    ge = GradientExplorer(ex_op, objective=objective)
+    K = ex_op.space.n
+    rng = np.random.default_rng(29)
+    knobs = np.exp(rng.uniform(-0.5, 0.5, K)).astype(np.float32)
+    tau = 0.2                    # same curvature scale as the latency FD test
+    _, g = ge.value_and_grad(knobs[None], tau)
+    g = np.asarray(g[0], np.float64)
+    eps = 1e-2
+    for k in range(K):
+        kp, km = knobs.copy(), knobs.copy()
+        kp[k] += eps
+        km[k] -= eps
+        vp, _ = ge.value_and_grad(kp[None], tau)
+        vm, _ = ge.value_and_grad(km[None], tau)
+        fd = (float(vp[0]) - float(vm[0])) / (2 * eps)
+        assert abs(fd - g[k]) <= 5e-2 * max(1.0, abs(fd)), \
+            (objective, ex_op.space.names[k], fd, g[k])
+
+
+def test_energy_objective_needs_the_packed_engine():
+    from repro.core.aidg.explorer import default_scenarios
+    exw = Explorer(scenarios=default_scenarios()[:1], engine="wavefront")
+    with pytest.raises(ValueError, match="objective"):
+        GradientExplorer(exw, objective="energy")
+    with pytest.raises(ValueError, match="packed"):
+        GradientExplorer(exw, objective="edp")
+
+
+def test_energy_refine_hard_score_is_reproducible(ex_op):
+    ge = GradientExplorer(ex_op, objective="edp")
+    out = ge.refine(starts=2, steps=4)
+    re = ex_op.explore(out.theta[None, :])
+    assert float(re.latency[0] * re.energy[0]) == pytest.approx(
+        out.score, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# (c) the per-memory-level energy-bottleneck report
+# ---------------------------------------------------------------------------
+
+
+def test_bottleneck_report_scenario_cell(ex_op):
+    cs = next(c for c in ex_op.compiled if c.name == "tpu_v5e/gemm")
+    rows = energy_bottleneck_report(cs)
+    assert rows, "tpu_v5e/gemm moves data — report must not be empty"
+    classes = {r["storage_class"] for r in rows}
+    assert "dram" in classes                     # hbm0
+    assert "onchip" in classes                   # vmem0
+    shares = [r["share"] for r in rows]
+    assert sum(shares) == pytest.approx(1.0)
+    assert shares == sorted(shares, reverse=True)    # sorted descending
+    for r in rows:
+        assert r["energy_pj"] == pytest.approx(
+            r["words"] * r["pj_per_word"])
+    # DRAM access energy dominates on-chip per word — with real traffic
+    # on both levels the report makes the hierarchy visible
+    by_cls = {r["storage_class"]: r for r in rows}
+    assert by_cls["dram"]["pj_per_word"] > by_cls["onchip"]["pj_per_word"]
+
+
+def test_bottleneck_report_network_cell(ex):
+    net = next(c for c in ex.compiled if hasattr(c, "stack"))
+    rows = energy_bottleneck_report(net)
+    assert rows
+    assert sum(r["share"] for r in rows) == pytest.approx(1.0)
+    total = sum(r["energy_pj"] for r in rows)
+    assert total > 0.0
+    # composed traffic: a whole DNN moves orders of magnitude more words
+    # than any single-operator cell
+    op = energy_bottleneck_report(ex.compiled[0])
+    assert total > sum(r["energy_pj"] for r in op)
+
+
+# ---------------------------------------------------------------------------
+# (d) the coefficient tables and classifiers
+# ---------------------------------------------------------------------------
+
+
+def test_energy_model_registry_and_tables():
+    assert set(ENERGY_REGISTRY) == set(ARCH_TECH_NM)
+    for arch, nm in ARCH_TECH_NM.items():
+        m = energy_model(arch)
+        assert m.tech_nm == nm
+        assert m.static_pj > 0.0
+    # unknown architectures fall back to the default node, not a KeyError
+    assert isinstance(energy_model("not_an_arch"), EnergyModel)
+    # scaling: every coefficient shrinks monotonically with the tech node
+    for cls in ("mac", "vector", "mem", "ctrl"):
+        vals = [TECH_TABLES[nm]["op"][cls] for nm in sorted(TECH_TABLES)]
+        assert vals == sorted(vals), cls         # 7 nm cheapest
+    for cls in ("reg", "onchip", "dram"):
+        vals = [TECH_TABLES[nm]["word"][cls] for nm in sorted(TECH_TABLES)]
+        assert vals == sorted(vals), cls
+
+
+def test_op_and_storage_classifiers():
+    assert EnergyModel.op_category("gemm@matMulFu0") == "mac"
+    assert EnergyModel.op_category("row_conv@pe00") == "mac"
+    assert EnergyModel.op_category("attn@vpu0") == "vector"
+    assert EnergyModel.op_category("reduce@cu3") == "vector"
+    assert EnergyModel.op_category("t_load@lsu0") == "mem"
+    assert EnergyModel.op_category("drain@store0") == "mem"
+    assert EnergyModel.op_category("branch@ctrl0") == "ctrl"
+    assert EnergyModel.storage_class("dram0") == "dram"
+    assert EnergyModel.storage_class("hbm0") == "dram"
+    assert EnergyModel.storage_class("vmem0") == "onchip"
+    assert EnergyModel.storage_class("glb0") == "onchip"
+    assert EnergyModel.storage_class("pmu2") == "onchip"
+    assert EnergyModel.storage_class("rf7") == "reg"
+    m = energy_model("gamma")
+    assert m.word_pj("dram0") == m.word_table["dram"]
+    assert m.op_pj("gemm@matMulFu0") == m.op_table["mac"]

@@ -222,6 +222,68 @@ def test_pareto_front_keeps_exactly_one_of_duplicates(objs):
         assert i == first, (i, first)
 
 
+# the same invariants in 3 objectives — (latency, energy, cost), the
+# frontier Explorer.explore and serve._rank actually rank
+_obj_rows3 = st.lists(st.tuples(_objective, _objective, _objective),
+                      min_size=1, max_size=40).map(
+                          lambda r: np.asarray(r, np.float64))
+
+
+@given(_obj_rows3)
+@settings(**SETTINGS)
+def test_pareto_front_3d_dominance_consistent(objs):
+    front = pareto_front(objs)
+    assert front.size > 0
+    kept = set(front.tolist())
+    for i in front:                      # mutually non-dominated
+        for j in front:
+            if i != j:
+                assert not _dominates(objs[j], objs[i]), (i, j)
+    for j in range(len(objs)):           # excluded => dominated or duplicate
+        if j not in kept:
+            assert any(_dominates(objs[i], objs[j]) or
+                       np.array_equal(objs[i], objs[j]) for i in front), j
+
+
+@given(_obj_rows3, st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_pareto_front_3d_deterministic_under_permutation(objs, seed):
+    f1 = pareto_front(objs)
+    assert np.array_equal(f1, pareto_front(objs))
+    perm = np.random.default_rng(seed).permutation(len(objs))
+    f2 = pareto_front(objs[perm])
+    pts = lambda o, idx: sorted(map(tuple, o[idx]))
+    assert pts(objs, f1) == pts(objs[perm], f2)
+    assert np.all(np.diff(objs[f1, 0]) >= 0)             # sorted by obj 0
+
+
+@given(_obj_rows3, st.integers(0, 2 ** 31 - 1),
+       st.sampled_from([np.nan, np.inf, -np.inf]))
+@settings(**SETTINGS)
+def test_pareto_front_3d_nonfinite_rows_never_enter(objs, seed, bad):
+    """A diverged candidate (NaN/inf in any objective) is dropped with a
+    warning and can neither enter the 3-D frontier nor displace a finite
+    row that the clean input would have kept."""
+    rng = np.random.default_rng(seed)
+    dirty = objs.copy()
+    k = int(rng.integers(0, len(objs)))
+    dirty[k, int(rng.integers(0, 3))] = bad
+    with pytest.warns(RuntimeWarning, match="non-finite"):
+        front = pareto_front(dirty)
+    assert k not in front.tolist()
+    for i in front:
+        assert np.all(np.isfinite(dirty[i]))
+    # brute-force oracle over the finite rows: non-dominated, first
+    # occurrence of each duplicate point
+    rows = [i for i in range(len(dirty))
+            if np.all(np.isfinite(dirty[i]))]
+    want = [i for i in rows
+            if not any(_dominates(dirty[j], dirty[i]) or
+                       (j < i and np.array_equal(dirty[j], dirty[i]))
+                       for j in rows if j != i)]
+    assert sorted(front.tolist()) == sorted(want)
+
+
 # ---------------------------------------------------------------------------
 # micro-batcher contract (repro.serve.batcher)
 # ---------------------------------------------------------------------------

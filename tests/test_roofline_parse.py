@@ -1,0 +1,175 @@
+"""Fast unit tests for the HLO-text roofline parsers.
+
+``parse_dot_flops`` / ``parse_collective_bytes`` walk post-optimization
+HLO *text*, which has drifted across XLA releases: older dumps print bare
+operands (``dot(%a, %b)``) while current ones inline operand types
+(``dot(f32[2,32,64]{2,1,0} %a, ...)``).  These snippets pin both formats
+so the next drift fails here in milliseconds instead of inside the
+7-minute ``test_dryrun_lite`` subprocess.
+"""
+
+import math
+
+from repro.launch.roofline import parse_collective_bytes, parse_dot_flops
+
+# -- checked-in snippets -----------------------------------------------------
+
+# Legacy text: bare % operands, no inline operand types.
+HLO_BARE = """\
+HloModule legacy
+
+ENTRY %main.1 (a: f32[8,16], b: f32[16,4]) -> f32[8,4] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %b = f32[16,4]{1,0} parameter(1)
+  ROOT %dot.1 = f32[8,4]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+# Current text (jax 0.4.x / XLA:CPU): inlined operand types with layouts.
+HLO_TYPED = """\
+HloModule jit_f, is_scheduled=true, entry_computation_layout={(f32[8,16]{1,0}, f32[16,4]{1,0})->f32[8,4]{1,0}}
+
+ENTRY %main.2_spmd (param: f32[8,16], param.1: f32[16,4]) -> f32[8,4] {
+  %param = f32[8,16]{1,0} parameter(0)
+  %param.1 = f32[16,4]{1,0} parameter(1)
+  ROOT %dot.0 = f32[8,4]{1,0} dot(f32[8,16]{1,0} %param, f32[16,4]{1,0} %param.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}, metadata={op_name="jit(f)/dot_general"}
+}
+"""
+
+# Typed operands with TPU-style tiled layout annotations.
+HLO_TILED = """\
+HloModule tiled
+
+ENTRY %main.3 (p0: bf16[128,256], p1: bf16[256,512]) -> bf16[128,512] {
+  %p0 = bf16[128,256]{1,0:T(8,128)(2,1)} parameter(0)
+  %p1 = bf16[256,512]{1,0:T(8,128)(2,1)} parameter(1)
+  ROOT %dot.2 = bf16[128,512]{1,0:T(8,128)(2,1)} dot(bf16[128,256]{1,0:T(8,128)(2,1)} %p0, bf16[256,512]{1,0:T(8,128)(2,1)} %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+# Scanned layer stack: dot inside a while body whose trip count XLA knows.
+# Modeled on a real jax.lax.scan lowering (typed operands throughout).
+HLO_WHILE = """\
+HloModule jit_scan, is_scheduled=true
+
+%region_0.9 (arg_tuple.10: (s32[], f32[2,32,64], f32[12,64,64])) -> (s32[], f32[2,32,64], f32[12,64,64]) {
+  %arg_tuple.10 = (s32[], f32[2,32,64]{2,1,0}, f32[12,64,64]{2,1,0}) parameter(0)
+  %get-tuple-element.4 = f32[2,32,64]{2,1,0} get-tuple-element((s32[], f32[2,32,64]{2,1,0}, f32[12,64,64]{2,1,0}) %arg_tuple.10), index=1
+  %get-tuple-element.8 = f32[64,64]{1,0} bitcast(f32[12,64,64]{2,1,0} %arg_tuple.10)
+  %dot.0 = f32[2,32,64]{2,1,0} dot(f32[2,32,64]{2,1,0} %get-tuple-element.4, f32[64,64]{1,0} %get-tuple-element.8), lhs_contracting_dims={2}, rhs_contracting_dims={0}
+  ROOT %tuple.2 = (s32[], f32[2,32,64]{2,1,0}, f32[12,64,64]{2,1,0}) tuple(%dot.0)
+}
+
+%region_1.18 (arg_tuple.19: (s32[], f32[2,32,64], f32[12,64,64])) -> pred[] {
+  %arg_tuple.19 = (s32[], f32[2,32,64]{2,1,0}, f32[12,64,64]{2,1,0}) parameter(0)
+  ROOT %compare.1 = pred[] compare(%arg_tuple.19, %arg_tuple.19), direction=LT
+}
+
+ENTRY %main.25_spmd (param: f32[2,32,64], param.1: f32[12,64,64]) -> f32[2,32,64] {
+  %param = f32[2,32,64]{2,1,0} parameter(0)
+  %param.1 = f32[12,64,64]{2,1,0} parameter(1)
+  %tuple = (s32[], f32[2,32,64]{2,1,0}, f32[12,64,64]{2,1,0}) tuple(%param, %param.1)
+  %while.25 = (s32[], f32[2,32,64]{2,1,0}, f32[12,64,64]{2,1,0}) while((s32[], f32[2,32,64]{2,1,0}, f32[12,64,64]{2,1,0}) %tuple), condition=%region_1.18, body=%region_0.9, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %get-tuple-element.30 = f32[2,32,64]{2,1,0} get-tuple-element((s32[], f32[2,32,64]{2,1,0}, f32[12,64,64]{2,1,0}) %while.25), index=1
+}
+"""
+
+# Collectives with typed operands, one inside a known-trip while body.
+HLO_COLL = """\
+HloModule jit_coll, is_scheduled=true, num_partitions=8
+
+%add.clone (x.1: f32[], y.1: f32[]) -> f32[] {
+  %x.1 = f32[] parameter(0)
+  %y.1 = f32[] parameter(1)
+  ROOT %add.2 = f32[] add(f32[] %x.1, f32[] %y.1)
+}
+
+%region_0.9 (arg_tuple.10: (s32[], f32[32,128])) -> (s32[], f32[32,128]) {
+  %arg_tuple.10 = (s32[], f32[32,128]{1,0}) parameter(0)
+  %get-tuple-element.4 = f32[32,128]{1,0} get-tuple-element((s32[], f32[32,128]{1,0}) %arg_tuple.10), index=1
+  %all-reduce.1 = f32[32,128]{1,0} all-reduce(f32[32,128]{1,0} %get-tuple-element.4), channel_id=2, replica_groups=[1,8]<=[8], use_global_device_ids=true, to_apply=%add.clone
+  ROOT %tuple.2 = (s32[], f32[32,128]{1,0}) tuple(%all-reduce.1)
+}
+
+%region_1.18 (arg_tuple.19: (s32[], f32[32,128])) -> pred[] {
+  %arg_tuple.19 = (s32[], f32[32,128]{1,0}) parameter(0)
+  ROOT %compare.1 = pred[] compare(%arg_tuple.19, %arg_tuple.19), direction=LT
+}
+
+ENTRY %main.18_spmd (param: f32[32,16]) -> f32[32,128] {
+  %param = f32[32,16]{1,0} parameter(0)
+  %all-gather = f32[32,128]{1,0} all-gather(f32[32,16]{1,0} %param), channel_id=1, replica_groups=[1,8]<=[8], dimensions={1}, use_global_device_ids=true
+  %tuple = (s32[], f32[32,128]{1,0}) tuple(%all-gather)
+  %while.25 = (s32[], f32[32,128]{1,0}) while((s32[], f32[32,128]{1,0}) %tuple), condition=%region_1.18, body=%region_0.9, backend_config={"known_trip_count":{"n":"4"}}
+  ROOT %get-tuple-element.30 = f32[32,128]{1,0} get-tuple-element((s32[], f32[32,128]{1,0}) %while.25), index=1
+}
+"""
+
+
+# -- parse_dot_flops ---------------------------------------------------------
+
+def test_dot_flops_bare_operands():
+    assert parse_dot_flops(HLO_BARE) == 2.0 * 8 * 4 * 16
+
+
+def test_dot_flops_typed_operands():
+    assert parse_dot_flops(HLO_TYPED) == 2.0 * 8 * 4 * 16
+
+
+def test_dot_flops_tiled_layouts():
+    assert parse_dot_flops(HLO_TILED) == 2.0 * 128 * 512 * 256
+
+
+def test_dot_flops_while_trip_multiplication():
+    # one dot of 2*(2*32*64)*64 FLOPs, executed known_trip_count=12 times
+    per_trip = 2.0 * (2 * 32 * 64) * 64
+    assert parse_dot_flops(HLO_WHILE) == 12 * per_trip
+
+
+def test_dot_flops_both_formats_agree():
+    assert parse_dot_flops(HLO_BARE) == parse_dot_flops(HLO_TYPED)
+
+
+# -- parse_collective_bytes --------------------------------------------------
+
+def test_collective_bytes_typed_operands_and_trips():
+    out = parse_collective_bytes(HLO_COLL)
+    payload = 32 * 128 * 4  # f32[32,128]
+    # all-gather: once in entry, ring factor 1.0
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["bytes"] == payload * 1.0
+    # all-reduce: inside while body, trips=4, ring factor 2.0
+    assert out["all-reduce"]["count"] == 4
+    assert out["all-reduce"]["bytes"] == 4 * payload * 2.0
+    # kinds not present report zero
+    assert out["reduce-scatter"]["bytes"] == 0.0
+
+
+def test_collective_bytes_ignores_done_ops():
+    hlo = HLO_BARE.replace(
+        "ROOT %dot.1 = f32[8,4]{1,0} dot(%a, %b), "
+        "lhs_contracting_dims={1}, rhs_contracting_dims={0}",
+        "ROOT %ard = f32[8,16]{1,0} all-reduce-done(%a)")
+    out = parse_collective_bytes(hlo)
+    assert out["all-reduce"]["count"] == 0
+
+
+def test_trip_corr_clamped_and_warns():
+    """roofline_report.analyze never deflates bytes; undercount warns."""
+    import warnings as w
+    from repro.launch.roofline_report import analyze
+
+    base = {"arch": "olmo_1b", "shape": "train_4k", "mesh": "single",
+            "n_active_params": 1e9, "bytes_per_device": 1e9,
+            "collective_bytes_total": 0.0, "memory": {}}
+    # scanned model: HLO walk 12x cost_analysis -> bytes scaled by 12
+    rec = dict(base, flops_per_device=1e12, dot_flops_per_device=12e12)
+    cell = analyze(rec)
+    assert cell.memory_s * 819e9 / 1e9 == 12.0  # trip_corr applied
+    # parser-drift shape: walk < cost_analysis -> clamped to 1, warns
+    rec = dict(base, flops_per_device=1e12, dot_flops_per_device=0.5e12)
+    with w.catch_warnings(record=True) as caught:
+        w.simplefilter("always")
+        cell = analyze(rec)
+    assert math.isclose(cell.memory_s * 819e9, 1e9)
+    assert any("parser drift" in str(c.message) for c in caught)

@@ -62,17 +62,21 @@ def direct_answer(service, q):
     cand = service.pool.copy()
     for name, val in q.overrides:
         cand[:, ex.space.names.index(name)] = val
-    cycles = ex.evaluate(cand)
+    cycles, energy_pj = ex.evaluate_full(cand)
     cols = np.asarray(resolve_cells(ex.compiled, workload=q.workload,
                                     archs=q.archs))
     names = tuple(ex.compiled[i].name for i in cols)
     rel = cycles[:, cols] / ex.baselines[None, cols]
     latency = rel.mean(axis=1)
+    energy = (energy_pj[:, cols]
+              / ex.energy_baselines[None, cols]).mean(axis=1)
     cost = ex.cost_proxy(cand)
-    top = pareto_front(np.stack([latency, cost], axis=1))[: q.top_k]
+    top = pareto_front(np.stack([latency, energy, cost],
+                                axis=1))[: q.top_k]
     designs = tuple(
         Design(theta=tuple(float(v) for v in cand[i]),
-               latency=float(latency[i]), cost=float(cost[i]),
+               latency=float(latency[i]), energy=float(energy[i]),
+               cost=float(cost[i]),
                cycles=tuple(float(c) for c in cycles[i, cols]))
         for i in top)
     lead = int(top[0]) if len(top) else int(np.argmin(latency))
@@ -96,6 +100,20 @@ def test_answer_shape(svc):
     assert len(d.theta) == svc.space.n and len(d.cycles) == len(a.cells)
     assert d.knobs(svc.space.names)["matrix"] == d.theta[
         svc.space.names.index("matrix")]
+
+
+def test_energy_surfaced_in_answers_and_stats(svc):
+    a = svc.query(workload="gemm")
+    assert all(d.energy > 0.0 for d in a.designs)
+    # row 0 of the pool is θ = 1, the reference machine: its energy is
+    # exactly the baseline, so SOME ranked design sits at/above 1.0 only
+    # if θ = 1 survived the front — but every design's energy is finite
+    assert all(np.isfinite(d.energy) for d in a.designs)
+    st = svc.stats()
+    assert st["objectives"] == ("latency", "energy", "cost")
+    base = st["energy_baseline_pj"]
+    assert set(base) == {cs.name for cs in svc.explorer.compiled}
+    assert all(v > 0.0 for v in base.values())
 
 
 # -- determinism under concurrency ------------------------------------------

@@ -32,6 +32,8 @@ MODULES = [
     "repro.core.aidg.dse",
     "repro.core.aidg.explorer",
     "repro.core.aidg.gradient",
+    "repro.core.aidg.energy",
+    "repro.core.archs.energy",
     "repro.core.network.graph",
     "repro.core.network.lowering",
     "repro.core.network.model",
