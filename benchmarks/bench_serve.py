@@ -14,6 +14,14 @@ Sections:
   (hits / misses / coalesced and the combined hit ratio).  The
   small-budget run asserts the ratio is > 0 (a repeated question must
   never reach the device twice).
+* ``serve/surrogate`` — the staged oracle hierarchy's fast tier: the
+  SAME cold distinct-query stream served twice, once by a service whose
+  every query the trained surrogate answers and once by the packed-only
+  service; reports per-fresh-query latency for both tiers, the speedup
+  (asserted ≥ 10x on the small budget), the surrogate's training time,
+  and the measured fallback rate at the default confidence threshold.
+  The small-budget row is guarded against the recorded snapshot
+  (``benchmarks.baseline``), so fast-tier throughput regressions fail CI.
 * ``serve/sharded`` — ``PackedMatrix.evaluate(sharded=True)`` vs the
   single-device path on the same candidate batch: devices used, both
   throughputs, speedup, and bitwise agreement (always asserted).  When
@@ -127,6 +135,78 @@ def _bench_service(rows: List[Dict]) -> None:
                 f"stream positions {bad[:5]}")
 
 
+# -- the staged oracle hierarchy's fast tier ---------------------------------
+
+def _bench_surrogate(rows: List[Dict]) -> None:
+    from repro.core.aidg.explorer import Explorer
+    from repro.serve import DSEService
+    from repro.surrogate import SurrogateConfig, train_surrogate
+
+    ex = Explorer()                    # packed engine, operator matrix
+    cfg = SurrogateConfig(n_samples=96 if SMALL else 192,
+                          steps=600 if SMALL else 1500)
+    t0 = time.perf_counter()
+    bundle = train_surrogate(ex, cfg)
+    t_train = time.perf_counter() - t0
+
+    pool = 32 if SMALL else 128
+    kw = dict(pool=pool, chunk=pool, max_batch=8)
+    distinct = _query_stream(ex)
+    n = len(distinct)
+
+    # warm both tiers' compiled shapes, then time COLD sequential streams
+    # on fresh services: every query is a miss, so the per-query cost is
+    # the tier's evaluation itself, not the answer cache
+    with DSEService(ex, surrogate=bundle, surrogate_max_err=np.inf,
+                    **kw) as warm:
+        warm.query_many(distinct)
+    with DSEService(ex, **kw) as warm:
+        warm.query_many(distinct)
+
+    def cold_run(**extra):
+        svc = DSEService(ex, **kw, **extra)
+        t0 = time.perf_counter()
+        answers = svc.query_many(distinct)
+        dt = time.perf_counter() - t0
+        st = svc.stats()
+        svc.close()
+        return dt, st, answers
+
+    t_sur, st_sur, a_sur = cold_run(surrogate=bundle,
+                                    surrogate_max_err=np.inf)
+    t_pkd, st_pkd, _ = cold_run()
+    if st_sur["tiers"]["surrogate"] != n or st_pkd["tiers"]["packed"] != n:
+        raise AssertionError(
+            f"tier routing broke the cold streams: {st_sur['tiers']} / "
+            f"{st_pkd['tiers']} for {n} distinct queries")
+
+    # the honest fallback rate at the DEFAULT confidence threshold
+    _, st_def, _ = cold_run(surrogate=bundle)
+    speedup = t_pkd / t_sur
+    configs = n * pool * st_sur["cells"]
+    rows.append({"name": "serve/surrogate", "us_per_call": t_sur / n * 1e6,
+                 "derived": (f"queries={n};pool={pool};"
+                             f"cells={st_sur['cells']};"
+                             f"sur_us_per_query={t_sur / n * 1e6:.0f};"
+                             f"packed_us_per_query={t_pkd / n * 1e6:.0f};"
+                             f"speedup={speedup:.1f}x;"
+                             f"configs_per_s={configs / t_sur:.0f};"
+                             f"train_s={t_train:.1f};"
+                             f"fallback_rate={st_def['fallback_rate']:.2f};"
+                             f"max_err={st_def['surrogate_max_err']}")})
+    if SMALL and speedup < 10.0:
+        raise AssertionError(
+            f"surrogate tier speedup {speedup:.1f}x < 10x over the packed "
+            f"dispatch ({t_sur / n * 1e6:.0f}us vs {t_pkd / n * 1e6:.0f}us "
+            f"per query)")
+    if SMALL:
+        for a in a_sur:
+            if a.tier != "surrogate" or a.err_bound <= 0.0:
+                raise AssertionError(
+                    f"cold surrogate stream produced a {a.tier!r} answer "
+                    f"(err_bound={a.err_bound})")
+
+
 # -- sharded probe ----------------------------------------------------------
 
 def _sharded_payload() -> Dict:
@@ -219,7 +299,11 @@ def _bench_sharded(rows: List[Dict]) -> None:
 
 def run(rows: List[Dict]) -> None:
     _bench_service(rows)
+    _bench_surrogate(rows)
     _bench_sharded(rows)
+    from .baseline import assert_baseline, guard_enabled
+    if guard_enabled():
+        assert_baseline(rows, section="serve", names=("serve/surrogate",))
 
 
 if __name__ == "__main__":

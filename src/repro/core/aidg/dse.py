@@ -1113,6 +1113,25 @@ class PackedMatrix:
             out_c[s:e], out_e[s:e] = run(kt[s:e], step)
         return out_c, out_e
 
+    def export_training_table(self, knob_thetas: np.ndarray,
+                              chunk: Optional[int] = None
+                              ) -> Dict[str, np.ndarray]:
+        """Sweep-output export for surrogate training
+        (``repro.surrogate``): evaluate ``(N, n_knobs)`` candidates plus
+        the θ = 1 reference in ONE chunked pass and return the
+        self-describing table ``{"theta" (N, K), "cycles" (N, S),
+        "energy" (N, S), "cycles_base" (S,), "energy_base" (S,)}`` —
+        baselines from the same dispatch, so ratios are exactly the
+        quantities the packed engine normalizes by."""
+        kt = np.atleast_2d(np.asarray(knob_thetas, np.float32))
+        stacked = np.concatenate(
+            [np.ones((1, kt.shape[1]), np.float32), kt], axis=0)
+        cycles, energy = self.evaluate_full(stacked, chunk=chunk)
+        return {"theta": kt,
+                "cycles": cycles[1:], "energy": energy[1:],
+                "cycles_base": np.asarray(cycles[0], np.float64),
+                "energy_base": np.asarray(energy[0], np.float64)}
+
     def grad_fn(self, baselines: np.ndarray) -> Callable:
         """Cached ``jit(vmap(value_and_grad))`` over the soft family:
         ``fn(knobs (B, K), tau) -> (mean normalized latency (B,),

@@ -513,10 +513,13 @@ def pareto_front(objectives: np.ndarray) -> np.ndarray:
     (θ outside the evaluator's stable range) must not corrupt the frontier.
 
     The sweep visits rows in lexicographic order (first objective primary),
-    keeping a row unless some already-kept row weakly dominates it (<= in
-    every objective) — in sorted order a kept row can never be dominated by
-    a later one, so one pass suffices; on 2-objective input this reduces to
-    the classic best-so-far scan bit-for-bit.
+    keeping a row unless some earlier sorted row weakly dominates it (<= in
+    every objective) — equivalent to checking kept rows only (<= is
+    transitive: whatever dominates a dominated row also dominates its
+    victims), which turns the scan into one vectorized (B, B) dominance
+    mask instead of a Python pairwise loop (the serving tier ranks every
+    answer through here, so this is a hot path); on 2-objective input it
+    reduces to the classic best-so-far scan bit-for-bit.
     """
     objs = np.asarray(objectives, np.float64)
     assert objs.ndim == 2 and objs.shape[1] >= 2
@@ -531,14 +534,12 @@ def pareto_front(objectives: np.ndarray) -> np.ndarray:
     sub = objs[rows]
     m = sub.shape[1]
     order = np.lexsort(tuple(sub[:, j] for j in range(m - 1, -1, -1)))
-    keep: List[int] = []
-    kept: List[int] = []               # positions into sub
-    for i in order:
-        if any(np.all(sub[j] <= sub[i]) for j in kept):
-            continue
-        keep.append(int(rows[i]))
-        kept.append(i)
-    return np.asarray(keep, dtype=np.int64)
+    ss = sub[order]
+    # dom[i, j] = sorted row j weakly dominates sorted row i; only j < i
+    # can apply (lexsorted), so mask the upper triangle + diagonal
+    dom = (ss[None, :, :] <= ss[:, None, :]).all(axis=2)
+    dom &= np.tri(len(ss), k=-1, dtype=bool)
+    return np.asarray(rows[order[~dom.any(axis=1)]], dtype=np.int64)
 
 
 def resolve_cells(compiled: Sequence, workload: Optional[str] = None,

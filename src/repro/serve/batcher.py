@@ -24,13 +24,31 @@ instead of racing the wall clock.
 
 from __future__ import annotations
 
+import atexit
 import threading
 import time
+import weakref
 from concurrent.futures import Future
 from contextlib import contextmanager
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 __all__ = ["MicroBatcher", "plan_batches"]
+
+# every live batcher, so interpreter shutdown can flush + join the worker
+# threads of instances nobody explicitly closed (weak: a collected batcher
+# needs no cleanup — its worker is a daemon and dies with the process)
+_LIVE: "weakref.WeakSet[MicroBatcher]" = weakref.WeakSet()
+
+
+def _close_all() -> None:
+    """``atexit`` safety net: close every still-live batcher so no worker
+    thread is left running user code while the interpreter tears down
+    (unjoined workers racing module teardown raise spurious exceptions)."""
+    for b in list(_LIVE):
+        b.close(timeout=1.0)
+
+
+atexit.register(_close_all)
 
 
 def plan_batches(n: int, max_batch: int) -> List[Tuple[int, int]]:
@@ -72,6 +90,7 @@ class MicroBatcher:
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="microbatcher")
         self._worker.start()
+        _LIVE.add(self)
 
     # -- client side --------------------------------------------------------
 
@@ -112,12 +131,25 @@ class MicroBatcher:
                     raise TimeoutError("MicroBatcher.drain timed out")
                 self._cond.wait(left)
 
-    def close(self) -> None:
-        """Dispatch whatever is pending, then stop the worker thread."""
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Dispatch whatever is pending, then stop the worker thread.
+
+        Idempotent — safe to call repeatedly, from ``atexit``, or while a
+        ``hold()`` is open (closing overrides the hold so pending items
+        still flush rather than deadlocking the worker).  ``timeout``
+        bounds the join; ``None`` waits until the worker exits."""
         with self._cond:
             self._closed = True
             self._cond.notify_all()
-        self._worker.join()
+        if self._worker is not threading.current_thread():
+            self._worker.join(timeout)
+        _LIVE.discard(self)
+
+    def __enter__(self) -> "MicroBatcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- worker side --------------------------------------------------------
 
@@ -128,7 +160,9 @@ class MicroBatcher:
         the batcher is closing)."""
         with self._cond:
             while True:
-                if self._pending and not self._held:
+                # a close overrides any open hold(): pending items must
+                # still flush or the worker (and its joiner) deadlocks
+                if self._pending and (not self._held or self._closed):
                     deadline = self._window_open + self.window_s
                     if (len(self._pending) >= self.max_batch
                             or self._closed

@@ -32,6 +32,7 @@ arrival order, batching, cache state, or sharding — asserted by
 from __future__ import annotations
 
 import threading
+import time
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -59,6 +60,14 @@ class DSEService:
     across devices (bitwise-identical results, see
     ``PackedMatrix.evaluate``).
     ``chunk``: bound per-dispatch device batch rows (memory cap).
+    ``surrogate`` / ``surrogate_max_err``: arm the staged oracle
+    hierarchy — a trained :class:`repro.surrogate.SurrogateBundle` (or
+    ``True`` to train one here from the fixed default seed).  A fresh
+    query is answered by the surrogate tier when EVERY resolved cell's
+    calibrated confidence bound is at or under ``surrogate_max_err``,
+    and falls back to the exact packed dispatch otherwise; per-tier
+    answer counts, per-tier latency, and the fallback rate are reported
+    by :meth:`stats`.
     """
 
     def __init__(self, explorer: Optional[Explorer] = None, *,
@@ -67,7 +76,8 @@ class DSEService:
                  candidates: Optional[np.ndarray] = None,
                  max_batch: int = 8, window_s: float = 0.002,
                  sharded: bool = False, n_devices: Optional[int] = None,
-                 chunk: Optional[int] = None):
+                 chunk: Optional[int] = None,
+                 surrogate=None, surrogate_max_err: float = 0.02):
         if explorer is None:
             explorer = Explorer(scenarios=scenarios, networks=networks)
         self.explorer = explorer
@@ -81,17 +91,44 @@ class DSEService:
         self.sharded = bool(sharded)
         self.n_devices = n_devices
         self.chunk = chunk
+        self.surrogate = self._check_surrogate(surrogate)
+        self.surrogate_max_err = float(surrogate_max_err)
         self._lock = threading.Lock()
         self._cache: Dict[Tuple, Answer] = {}
         self.cache_stats = {"hits": 0, "misses": 0, "coalesced": 0}
         self._resolved: Dict[Tuple, Tuple[Tuple[str, ...], np.ndarray]] = {}
+        self._sur_ok: Dict[Tuple, bool] = {}
         self.dispatched_candidates = 0
+        self.tier_counts = {"surrogate": 0, "packed": 0}
+        self.tier_time_s = {"surrogate": 0.0, "packed": 0.0}
         # every window that reached _dispatch (threaded OR replay), as
         # query keys; and the deduped keys each DEVICE dispatch evaluated
         self.window_log: List[List[Tuple]] = []
         self.evaluated_log: List[List[Tuple]] = []
         self.batcher = MicroBatcher(self._dispatch, max_batch=max_batch,
                                     window_s=window_s)
+
+    def _check_surrogate(self, surrogate):
+        """Resolve/validate the surrogate tier: ``True`` trains a bundle
+        for this explorer from the fixed default seed; a provided bundle
+        must have been trained on exactly this matrix and design space
+        (cell-by-cell alignment — a mismatched bundle would silently
+        predict the wrong cells)."""
+        if surrogate is None:
+            return None
+        if surrogate is True:
+            from ..surrogate import train_surrogate
+            surrogate = train_surrogate(self.explorer)
+        names = tuple(cs.name for cs in self.explorer.compiled)
+        if tuple(surrogate.cell_names) != names:
+            raise ValueError(
+                f"surrogate bundle cells {surrogate.cell_names} do not "
+                f"match the served matrix {names}")
+        if tuple(surrogate.knob_names) != tuple(self.space.names):
+            raise ValueError(
+                f"surrogate bundle knobs {surrogate.knob_names} do not "
+                f"match the design space {self.space.names}")
+        return surrogate
 
     # -- client surface -----------------------------------------------------
 
@@ -137,14 +174,22 @@ class DSEService:
         """Service counters: answer-cache hits/misses/coalesced, dispatch
         count and mean batch size, total device-evaluated candidates, the
         ranking objectives and per-cell energy baselines (pJ at θ = 1),
-        and the process-wide scenario-cache counters the answer cache
-        mirrors."""
+        the process-wide scenario-cache counters the answer cache
+        mirrors, and the staged-oracle tier accounting — per-tier answer
+        counts (``tiers``, cache hits included), per-tier cumulative and
+        per-query latency (``tier_time_s`` / ``tier_us_per_query``), and
+        the ``fallback_rate`` (fraction of fresh queries the surrogate
+        tier had to hand to the exact packed dispatch; 1.0 when no
+        surrogate is armed)."""
         with self._lock:
             cs = dict(self.cache_stats)
             cand = self.dispatched_candidates
             windows = len(self.window_log)
             n_queries = sum(len(b) for b in self.window_log)
             device = len(self.evaluated_log)
+            tiers = dict(self.tier_counts)
+            tier_time = dict(self.tier_time_s)
+        fresh = tiers["surrogate"] + tiers["packed"]
         return {
             "cache": cs,
             "hit_ratio": (cs["hits"] + cs["coalesced"])
@@ -162,6 +207,14 @@ class DSEService:
                     self.explorer.compiled, self.explorer.energy_baselines)},
             "sharded": self.sharded,
             "scenario_cache": scenario_cache_stats(),
+            "surrogate_armed": self.surrogate is not None,
+            "surrogate_max_err": self.surrogate_max_err,
+            "tiers": {"cache": cs["hits"], **tiers},
+            "tier_time_s": tier_time,
+            "tier_us_per_query": {
+                t: tier_time[t] / tiers[t] * 1e6 if tiers[t] else 0.0
+                for t in tiers},
+            "fallback_rate": tiers["packed"] / fresh if fresh else 0.0,
         }
 
     # -- resolution ---------------------------------------------------------
@@ -214,15 +267,16 @@ class DSEService:
     # -- the coalesced dispatch --------------------------------------------
 
     def _dispatch(self, queries: List[Query]) -> List[Answer]:
-        """One micro-batch window -> one packed device dispatch.
+        """One micro-batch window through the staged oracle hierarchy.
 
         Cache hits answer immediately; the remaining queries are deduped
-        by key (same-window duplicates coalesce onto one computation) and
-        grouped by override signature (same overrides = same candidate
-        block, evaluated once); the distinct blocks are stacked along the
-        candidate axis and evaluated in ONE ``PackedMatrix`` dispatch
-        (sharded over devices when configured).  Per-candidate rows are
-        independent, so stacking order cannot change any query's answer.
+        by key (same-window duplicates coalesce onto one computation),
+        routed to the surrogate tier when eligible
+        (:meth:`_surrogate_answers`), and the rest grouped by override
+        signature (same overrides = same candidate block, evaluated
+        once) into ONE stacked ``PackedMatrix`` dispatch (sharded over
+        devices when configured).  Per-candidate rows are independent,
+        so stacking order cannot change any query's answer.
         """
         with self._lock:
             answers: Dict[Tuple, Answer] = {}
@@ -238,40 +292,103 @@ class DSEService:
                     cached = self._cache[q.key]
                     answers[q.key] = Answer(cached.query, cached.cells,
                                             cached.designs,
-                                            cached.best_arch, cached=True)
+                                            cached.best_arch, cached=True,
+                                            tier=cached.tier,
+                                            err_bound=cached.err_bound)
                 else:
                     self.cache_stats["misses"] += 1
                     fresh[q.key] = q
 
         if fresh:
-            # one candidate block per distinct override signature
-            blocks: Dict[Tuple, np.ndarray] = {}
-            for q in fresh.values():
-                if q.overrides not in blocks:
-                    blocks[q.overrides] = self._candidates_for(q)
-            sigs = list(blocks)
-            stacked = np.concatenate([blocks[s] for s in sigs], axis=0)
-            cycles, energy = self.explorer.evaluate_full(
-                stacked, chunk=self.chunk, sharded=self.sharded,
-                n_devices=self.n_devices)
-            starts = dict(zip(sigs, np.cumsum(
-                [0] + [blocks[s].shape[0] for s in sigs[:-1]])))
-            with self._lock:
-                self.dispatched_candidates += stacked.shape[0]
-                self.evaluated_log.append(list(fresh))
-                for key, q in fresh.items():
-                    s = int(starts[q.overrides])
-                    block = blocks[q.overrides]
-                    ans = self._rank(q, block,
-                                     cycles[s: s + block.shape[0]],
-                                     energy[s: s + block.shape[0]])
-                    answers[key] = ans
-                    self._cache[key] = ans
+            # staged oracle hierarchy: queries whose every resolved cell
+            # clears the surrogate's calibrated bound answer from the fast
+            # tier; the rest fall back to the exact packed dispatch
+            sur = {k: q for k, q in fresh.items()
+                   if self._surrogate_answers(q)}
+            packed = {k: q for k, q in fresh.items() if k not in sur}
+            if sur:
+                self._answer_surrogate(sur, answers)
+            if packed:
+                self._answer_packed(packed, answers)
 
         return [answers[k] for k in order]
 
+    def _surrogate_answers(self, q: Query) -> bool:
+        """True when the armed surrogate's calibrated per-cell bounds
+        clear ``surrogate_max_err`` for EVERY cell the query resolves to
+        (memoized per resolved subset)."""
+        if self.surrogate is None:
+            return False
+        key = (q.workload, q.archs)
+        ok = self._sur_ok.get(key)
+        if ok is None:
+            _, cols = self._resolve(q)
+            ok = bool(np.all(self.surrogate.err_bound[cols]
+                             <= self.surrogate_max_err))
+            self._sur_ok[key] = ok
+        return ok
+
+    def _answer_surrogate(self, group: Dict[Tuple, Query],
+                          answers: Dict[Tuple, Answer]) -> None:
+        """Fast tier: each distinct override signature's candidate block
+        goes through the bundle's jitted predictor at the fixed (pool,
+        n_knobs) shape — no stacking, so every call reuses one compiled
+        shape; the device-dispatch counters (``dispatched_candidates``,
+        ``evaluated_log``) are deliberately NOT touched, they count exact
+        packed work only."""
+        t0 = time.perf_counter()
+        blocks: Dict[Tuple, np.ndarray] = {}
+        preds: Dict[Tuple, Tuple[np.ndarray, np.ndarray]] = {}
+        for q in group.values():
+            if q.overrides not in blocks:
+                blocks[q.overrides] = self._candidates_for(q)
+                preds[q.overrides] = self.surrogate.predict_full(
+                    blocks[q.overrides])
+        with self._lock:
+            for key, q in group.items():
+                cycles, energy = preds[q.overrides]
+                ans = self._rank(q, blocks[q.overrides], cycles, energy,
+                                 tier="surrogate")
+                answers[key] = ans
+                self._cache[key] = ans
+            self.tier_counts["surrogate"] += len(group)
+            self.tier_time_s["surrogate"] += time.perf_counter() - t0
+
+    def _answer_packed(self, group: Dict[Tuple, Query],
+                       answers: Dict[Tuple, Answer]) -> None:
+        """Exact tier: one candidate block per distinct override
+        signature, stacked along the candidate axis and evaluated in ONE
+        ``PackedMatrix`` dispatch (sharded over devices when configured).
+        Per-candidate rows are independent, so stacking order cannot
+        change any query's answer."""
+        t0 = time.perf_counter()
+        blocks: Dict[Tuple, np.ndarray] = {}
+        for q in group.values():
+            if q.overrides not in blocks:
+                blocks[q.overrides] = self._candidates_for(q)
+        sigs = list(blocks)
+        stacked = np.concatenate([blocks[s] for s in sigs], axis=0)
+        cycles, energy = self.explorer.evaluate_full(
+            stacked, chunk=self.chunk, sharded=self.sharded,
+            n_devices=self.n_devices)
+        starts = dict(zip(sigs, np.cumsum(
+            [0] + [blocks[s].shape[0] for s in sigs[:-1]])))
+        with self._lock:
+            self.dispatched_candidates += stacked.shape[0]
+            self.evaluated_log.append(list(group))
+            for key, q in group.items():
+                s = int(starts[q.overrides])
+                block = blocks[q.overrides]
+                ans = self._rank(q, block,
+                                 cycles[s: s + block.shape[0]],
+                                 energy[s: s + block.shape[0]])
+                answers[key] = ans
+                self._cache[key] = ans
+            self.tier_counts["packed"] += len(group)
+            self.tier_time_s["packed"] += time.perf_counter() - t0
+
     def _rank(self, q: Query, cand: np.ndarray, cycles: np.ndarray,
-              energy_pj: np.ndarray) -> Answer:
+              energy_pj: np.ndarray, tier: str = "packed") -> Answer:
         """Score one query's candidate block over its resolved cell subset
         and extract the Pareto-ranked top-k designs — the same latency /
         energy / cost / ``pareto_front`` pipeline as ``Explorer.explore``,
@@ -295,5 +412,7 @@ class DSEService:
         lead = int(top[0]) if len(top) else int(np.argmin(latency))
         best_cell = int(np.argmin(rel[lead]))
         best_arch = self.explorer.compiled[int(cols[best_cell])].arch
+        err = (float(self.surrogate.err_bound[cols].max())
+               if tier == "surrogate" else 0.0)
         return Answer(query=q, cells=names, designs=designs,
-                      best_arch=best_arch)
+                      best_arch=best_arch, tier=tier, err_bound=err)

@@ -115,15 +115,21 @@ class Answer:
     ``best_arch`` names the architecture whose cell runs the top design at
     the lowest baseline-relative latency — the "which accelerator" half of
     the question; ``designs[0]`` is the "which config" half.  ``cached``
-    records whether this reply came from the answer cache; it is excluded
-    from equality because a cache hit must compare equal to the same
-    answer recomputed from scratch."""
+    records whether this reply came from the answer cache; ``tier`` names
+    the oracle tier that computed it (``"packed"``, or ``"surrogate"``
+    when the staged hierarchy answered from the fast tier) and
+    ``err_bound`` is that tier's stated relative-error bound (0.0 for the
+    exact packed tier).  The bookkeeping fields are excluded from
+    equality because a cache hit must compare equal to the same answer
+    recomputed from scratch."""
 
     query: Query
     cells: Tuple[str, ...]           # resolved cell names, matrix order
     designs: Tuple[Design, ...]      # Pareto-ranked, latency-ascending
     best_arch: str
     cached: bool = field(default=False, compare=False)
+    tier: str = field(default="packed", compare=False)
+    err_bound: float = field(default=0.0, compare=False)
 
     @property
     def best(self) -> Design:

@@ -1,0 +1,114 @@
+"""Monotone closed-form surrogate models for the packed oracle.
+
+The exact engines compute a cell's latency as a composition of ``max`` /
+``sum`` / affine steps with nonnegative θ coefficients (wavefront levels,
+queue folds, run-length network composition), so ``T(θ)`` is a convex
+piecewise-linear, monotone-nondecreasing function of the knob vector on
+the design box.  The surrogate mirrors that structure instead of using a
+generic MLP: per cell, a *sum of softened maxima of affine functions*
+
+``lat(θ) = Σ_g  τ_g · logsumexp_j[(a_gj + w_gj · θ) / τ_g]``,
+``w = softplus(raw) ≥ 0``
+
+(``G`` groups ≈ composed layer runs, ``J`` paths per group ≈ competing
+critical paths).  Nonnegative weights make every prediction **provably
+monotone nondecreasing in each θ knob** — the same direction the exact
+engine provably has — which the Hypothesis property tests pin down.
+Energy reuses the engine's own closed form ``E(θ) = edyn · (1/θ) + const
++ static · T(θ)`` with learned nonnegative coefficients:
+
+``en(θ) = α · (1/θ) + β · lat(θ) + γ``,  ``α, β, γ ≥ 0``.
+
+Both heads predict ratios relative to the θ = 1 reference machine; the
+:class:`repro.surrogate.train.SurrogateBundle` denormalizes with the
+recorded baselines.  Parameters per cell are tiny (G·J·(K+1) + K + 2
+floats), so all cells train jointly as one stacked pytree via
+``jax.vmap`` + ``repro.optim.adamw``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_cell_params", "predict_rel", "predict_rel_cells",
+           "init_stacked_params", "DEFAULT_GROUPS", "DEFAULT_PATHS"]
+
+# Default surrogate shape: 4 composition groups x 8 affine paths covers
+# the default matrix (single-operator cells use the spare groups as
+# near-zero terms; deep network cells spread their run structure).
+DEFAULT_GROUPS = 4
+DEFAULT_PATHS = 8
+
+_MIN_TAU = 1e-3       # LSE temperature floor (exact-max limit stays off)
+
+
+def _inv_softplus(y: float) -> float:
+    """The raw value whose softplus is ``y`` (for parameter init)."""
+    return float(math.log(math.expm1(max(y, 1e-6))))
+
+
+def init_cell_params(key: jax.Array, n_knobs: int,
+                     groups: int = DEFAULT_GROUPS,
+                     paths: int = DEFAULT_PATHS) -> Dict[str, jnp.ndarray]:
+    """Fresh single-cell parameters (a dict pytree), initialized so the
+    latency head predicts ≈ 1 at θ = 1 (each group contributes ≈ 1/G and
+    path weights start near ``1 / (G · K)``) with small seeded jitter to
+    break path symmetry."""
+    kw, ka, ke = jax.random.split(key, 3)
+    w0 = _inv_softplus(1.0 / (groups * n_knobs))
+    return {
+        "a": 0.02 * jax.random.normal(ka, (groups, paths), jnp.float32),
+        "w_raw": w0 + 0.25 * jax.random.normal(
+            kw, (groups, paths, n_knobs), jnp.float32),
+        "tau_raw": jnp.full((groups,), _inv_softplus(0.05), jnp.float32),
+        "alpha_raw": _inv_softplus(0.1 / n_knobs)
+        + 0.1 * jax.random.normal(ke, (n_knobs,), jnp.float32),
+        "beta_raw": jnp.asarray(_inv_softplus(0.5), jnp.float32),
+        "gamma_raw": jnp.asarray(_inv_softplus(0.1), jnp.float32),
+    }
+
+
+def init_stacked_params(key: jax.Array, n_cells: int, n_knobs: int,
+                        groups: int = DEFAULT_GROUPS,
+                        paths: int = DEFAULT_PATHS) -> Dict[str, jnp.ndarray]:
+    """Per-cell parameters stacked along a leading cell axis — the pytree
+    the joint training loop (and :func:`predict_rel_cells`) consumes."""
+    keys = jax.random.split(key, n_cells)
+    return jax.vmap(lambda k: init_cell_params(k, n_knobs, groups, paths)
+                    )(keys)
+
+
+def predict_rel(params: Dict[str, jnp.ndarray], kt: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One cell's surrogate forward pass: ``(B, K)`` knob candidates →
+    ``((B,) latency ratio, (B,) energy ratio)`` relative to θ = 1.
+
+    Latency is the sum-of-softmax closed form from the module docstring;
+    with ``softplus`` weights it is monotone nondecreasing in every knob
+    for any parameter values.  Energy is the engine's analytic shape with
+    learned nonnegative coefficients (its ``α/θ`` term falls, its
+    ``β · lat`` term rises with θ — exactly like the exact objective)."""
+    kt = jnp.asarray(kt, jnp.float32)
+    w = jax.nn.softplus(params["w_raw"])            # (G, J, K) >= 0
+    tau = jax.nn.softplus(params["tau_raw"]) + _MIN_TAU   # (G,)
+    # affine paths: (B, G, J) = a + kt . w
+    z = params["a"][None] + jnp.einsum("bk,gjk->bgj", kt, w)
+    lat = jnp.sum(tau[None, :]
+                  * jax.scipy.special.logsumexp(z / tau[None, :, None],
+                                                axis=2), axis=1)
+    alpha = jax.nn.softplus(params["alpha_raw"])    # (K,) >= 0
+    beta = jax.nn.softplus(params["beta_raw"])
+    gamma = jax.nn.softplus(params["gamma_raw"])
+    en = (1.0 / kt) @ alpha + beta * lat + gamma
+    return lat, en
+
+
+# Stacked-cell forward pass: params carry a leading cell axis, the
+# candidate batch is shared -> ((S, B) latency ratios, (S, B) energy
+# ratios).  This is the serving-path entry point (one tiny dispatch for
+# a whole candidate block across every queried cell).
+predict_rel_cells = jax.vmap(predict_rel, in_axes=(0, None))

@@ -22,6 +22,25 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(scope="session")
+def matrix_ex():
+    """ONE full scenario/network matrix Explorer (packed engine) shared
+    across the whole suite — building it compiles all 31 cells, so every
+    module that sweeps the full matrix (energy, oracle chain) must reuse
+    this instance instead of constructing its own."""
+    from repro.core.aidg.explorer import Explorer
+    return Explorer(networks=True)
+
+
+@pytest.fixture(scope="session")
+def matrix_surrogate(matrix_ex):
+    """The surrogate tier trained on ``matrix_ex`` from the fixed default
+    seed — the artifact the oracle-chain tier checks against its stated
+    calibration, shared because training is the expensive step."""
+    from repro.surrogate import train_surrogate
+    return train_surrogate(matrix_ex)
+
+
 @pytest.fixture(autouse=True)
 def _isolate_scenario_cache_stats():
     """Zero the process-wide AIDG-cache hit/miss counters before every

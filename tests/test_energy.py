@@ -30,9 +30,10 @@ from repro.core.archs.energy import (ARCH_TECH_NM, ENERGY_REGISTRY,
 
 
 @pytest.fixture(scope="module")
-def ex():
-    """The full scenario/network matrix on the packed engine."""
-    return Explorer(networks=True)
+def ex(matrix_ex):
+    """The full scenario/network matrix on the packed engine (the shared
+    session instance — see conftest)."""
+    return matrix_ex
 
 
 @pytest.fixture(scope="module")
@@ -42,26 +43,10 @@ def ex_op():
 
 
 # ---------------------------------------------------------------------------
-# (a) exactness: packed == per-cell recompute, condensed fold == raw fold
+# (a) exactness: packed == analytic at random θ, condensed fold == raw fold
+# (the θ = 1 per-cell recompute assert lives in tests/test_oracle_chain.py,
+# the one differential harness for all cross-engine agreement claims)
 # ---------------------------------------------------------------------------
-
-
-def test_packed_energy_matches_per_cell_recompute_on_every_cell(ex):
-    """At θ = 1 the packed dispatch's energy must equal the analytic
-    per-cell closed form  E = Σ_k edyn_k + P_static · T  computed from the
-    RAW per-problem op-class counts (``CompiledScenario.energy_coeffs``
-    folds with ``cond=None``), on every operator AND network cell."""
-    S = len(ex.compiled)
-    assert S >= 10 + 2          # operator matrix + at least some networks
-    theta1 = np.ones((1, ex.space.n), np.float32)
-    c1, e1 = ex.evaluate_full(theta1)
-    edyn, pstat = ex._energy_arrays()
-    e_ref = edyn.sum(axis=1) + pstat * c1[0].astype(np.float64)
-    for k in range(S):
-        assert e1[0, k] == pytest.approx(e_ref[k], rel=1e-4), \
-            ex.compiled[k].name
-    # energy baselines come from the same dispatch: θ = 1 normalizes to 1
-    assert np.allclose(e1[0] / ex.energy_baselines, 1.0, rtol=1e-6)
 
 
 def test_packed_energy_matches_analytic_at_random_theta(ex):

@@ -1,0 +1,152 @@
+"""The staged oracle hierarchy, differentially tested in ONE place:
+
+    surrogate  →  packed  →  per-cell wavefront  →  event sim (θ = 1)
+
+Every cell of the full scenario/network matrix (10 operator + 21 network
+cells) runs through the same parametrized harness, each link of the chain
+asserted against the next, stricter one:
+
+* **surrogate vs packed** — on fresh seeded draws the training never saw,
+  each cell's relative error stays inside its own stated calibrated bound
+  for ≥ 85 % of draws (the bound is a held-out 95 % residual quantile with
+  a 1.5× margin, so fresh coverage must stay near that level), and the
+  matrix-wide median latency error is ≤ 2 % — the acceptance bar the
+  serving threshold (``surrogate_max_err``) is calibrated against;
+* **packed vs per-cell wavefront** — θ = 1 exact on operator cells, and
+  allclose at random θ (tie-breaks in near-equal queue arrivals may
+  legitimately differ between f32 evaluation orders; network totals are
+  float32 compositions, hence the relative pin);
+* **wavefront/packed vs event sim** — θ = 1 within each scenario's
+  ``sim_tol`` (cycle-exact architectures: exact) and always within 1 %;
+* **packed energy** — θ = 1 equals the analytic per-cell closed form
+  E = Σ_k edyn_k + P_static · T from the raw op-class counts.
+
+These asserts replace the pairwise agreement tests that used to be
+duplicated across test_condense_packed.py, test_network.py, and
+test_energy.py; the shared ``matrix_ex`` / ``matrix_surrogate`` session
+fixtures live in conftest.py.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.aidg.explorer import default_scenarios, random_candidates
+from repro.core.network import default_network_scenarios
+
+OP_NAMES = [s.name for s in default_scenarios()]
+NET_NAMES = [s.name for s in default_network_scenarios()]
+ALL_NAMES = OP_NAMES + NET_NAMES
+
+N_RAND = 6          # random-θ draws for the packed-vs-wavefront link
+N_FRESH = 48        # fresh draws for the surrogate-vs-packed link
+SEED = 20260808
+
+
+@pytest.fixture(scope="module")
+def packed_eval(matrix_ex):
+    """θ = 1 plus seeded random candidates through ONE packed dispatch:
+    ``(kt, (B, S) cycles, (B, S) energy)`` — the exact side of every
+    agreement check below."""
+    theta1 = np.ones((1, matrix_ex.space.n), np.float32)
+    kt = np.concatenate([theta1, random_candidates(
+        matrix_ex.space, N_RAND, seed=SEED, include_baseline=False)])
+    cycles, energy = matrix_ex.evaluate_full(kt)
+    return kt, cycles, energy
+
+
+@pytest.fixture(scope="module")
+def sur_report(matrix_ex, matrix_surrogate):
+    """The surrogate's fresh-sample error report (draws the training and
+    calibration never saw), shared by the per-cell and matrix-wide
+    asserts."""
+    from repro.surrogate import evaluate_surrogate
+    return evaluate_surrogate(matrix_surrogate, matrix_ex, n=N_FRESH,
+                              seed=SEED)
+
+
+def _cell(matrix_ex, name):
+    i = matrix_ex.scenario_names.index(name)
+    return i, matrix_ex.compiled[i], matrix_ex._projections[i]
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_surrogate_within_stated_bound(name, matrix_ex, matrix_surrogate,
+                                       sur_report):
+    """Chain link 1: the fast tier is honest — fresh-sample errors stay
+    inside the cell's own calibrated confidence bound at (near) the
+    calibration quantile, for BOTH objectives."""
+    i, _, _ = _cell(matrix_ex, name)
+    bound = matrix_surrogate.err_bound[i]
+    assert bound > 0.0, name
+    e_lat = sur_report["err_latency"][:, i]
+    e_en = sur_report["err_energy"][:, i]
+    assert np.mean(e_lat <= bound) >= 0.85, (name, bound, np.sort(e_lat)[-5:])
+    assert np.mean(e_en <= bound) >= 0.85, (name, bound, np.sort(e_en)[-5:])
+    assert np.median(e_lat) <= bound, (name, bound, float(np.median(e_lat)))
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_packed_matches_percell_wavefront(name, matrix_ex, packed_eval):
+    """Chain link 2: the packed single-dispatch result equals this cell's
+    own wavefront evaluation — exact at θ = 1 on operator cells, within
+    float32 tie-break tolerance at random θ and on network compositions."""
+    i, cell, proj = _cell(matrix_ex, name)
+    kt, cycles, _ = packed_eval
+    wf = np.asarray(cell.evaluate(matrix_ex.space, kt, proj,
+                                  engine="wavefront"), np.float64)
+    packed = cycles[:, i].astype(np.float64)
+    if name in OP_NAMES:
+        assert packed[0] == wf[0], (name, packed[0], wf[0])
+    else:
+        assert packed[0] == pytest.approx(wf[0], rel=5e-3), name
+    assert np.allclose(packed, wf, rtol=5e-3, atol=0.5), (
+        name, packed, wf)
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_wavefront_matches_event_sim_at_theta_one(name, matrix_ex,
+                                                  packed_eval):
+    """Chain link 3: at θ = 1 the analytic estimate agrees with the event
+    simulator — the ground truth the whole hierarchy is anchored to —
+    exactly on the sim_tol = 0 operator cells, within the stated sim_tol
+    elsewhere, and within 1 % on every network cell (the end-to-end
+    quantity the service actually ranks on)."""
+    i, cell, _ = _cell(matrix_ex, name)
+    _, cycles, _ = packed_eval
+    est = float(cycles[0, i])
+    sim = float(cell.simulate())
+    tol = float(cell.scenario.sim_tol)
+    rel = abs(est - sim) / sim
+    if name in OP_NAMES and tol == 0.0:
+        assert round(est) == round(sim), (name, est, sim)
+    else:
+        assert rel <= max(tol, 1e-3), (name, est, sim, rel)
+    if name in NET_NAMES:
+        assert rel <= 0.01, (name, est, sim, rel)
+
+
+def test_packed_energy_matches_per_cell_recompute(matrix_ex, packed_eval):
+    """Chain link 4: at θ = 1 the packed dispatch's energy equals the
+    analytic per-cell closed form E = Σ_k edyn_k + P_static · T computed
+    from the RAW per-problem op-class counts, on every cell, and the
+    energy baselines normalize to exactly 1."""
+    _, cycles, energy = packed_eval
+    edyn, pstat = matrix_ex._energy_arrays()
+    e_ref = edyn.sum(axis=1) + pstat * cycles[0].astype(np.float64)
+    for k, cs in enumerate(matrix_ex.compiled):
+        assert energy[0, k] == pytest.approx(e_ref[k], rel=1e-4), cs.name
+    assert np.allclose(energy[0] / matrix_ex.energy_baselines, 1.0,
+                       rtol=1e-6)
+
+
+def test_matrix_wide_surrogate_acceptance(matrix_surrogate, sur_report):
+    """The tentpole's acceptance bar: ≤ 2 % matrix-wide median latency
+    error on held-out samples, and at that bound at most 30 % of cells
+    are ineligible for the fast tier (the serving fallback ceiling)."""
+    assert sur_report["median_latency_err"] <= 0.02, \
+        sur_report["median_latency_err"]
+    assert sur_report["median_energy_err"] <= 0.02, \
+        sur_report["median_energy_err"]
+    ineligible = np.mean(matrix_surrogate.err_bound > 0.02)
+    assert ineligible <= 0.30, dict(zip(matrix_surrogate.cell_names,
+                                        matrix_surrogate.err_bound))

@@ -383,6 +383,86 @@ def test_microbatcher_exception_fails_exactly_its_batch(flags, k):
         mb.close()
 
 
+# ---------------------------------------------------------------------------
+# staged-oracle routing + surrogate monotonicity (repro.serve + surrogate)
+# ---------------------------------------------------------------------------
+
+import functools  # noqa: E402
+
+
+@functools.lru_cache(maxsize=1)
+def _tiny_ex():
+    """A 3-cell operator explorer, built once per process (compiled
+    scenarios are cached, so this is cheap after the first call)."""
+    from repro.core.aidg.explorer import Explorer
+    return Explorer(scenarios=_DEFAULT_SCENARIOS[:3])
+
+
+@functools.lru_cache(maxsize=1)
+def _tiny_bundle():
+    """A small fixed-seed surrogate over the tiny explorer (reduced
+    sample/step budget — these properties test routing and structure,
+    not accuracy)."""
+    from repro.surrogate import SurrogateConfig, train_surrogate
+    return train_surrogate(_tiny_ex(),
+                           SurrogateConfig(n_samples=48, steps=200))
+
+
+@given(st.lists(st.integers(0, 2), min_size=1, max_size=12),
+       st.floats(0.0, 1.0), st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_staged_routing_never_drops_dups_or_reorders(picks, max_err, k):
+    """Whatever the confidence threshold — 0 routes everything to the
+    packed tier, 1 routes (nearly) everything to the surrogate — every
+    query gets exactly one answer, in submission order, for its own
+    question; and the tier counters account for every fresh query."""
+    from repro.serve import DSEService, Query
+    ex = _tiny_ex()
+    svc = DSEService(ex, pool=8, surrogate=_tiny_bundle(),
+                     surrogate_max_err=max_err, max_batch=k)
+    try:
+        queries = [Query.make(workload=ex.compiled[i].workload,
+                              archs=ex.compiled[i].arch) for i in picks]
+        answers = svc.query_many(queries)
+        assert len(answers) == len(queries)
+        for q, a in zip(queries, answers):
+            assert a.query == q                      # no reorder, no swap
+            assert a.tier in ("surrogate", "packed")
+            if a.tier == "surrogate":
+                assert 0.0 < a.err_bound <= max_err
+        st_ = svc.stats()
+        fresh = st_["tiers"]["surrogate"] + st_["tiers"]["packed"]
+        accounted = (fresh + st_["cache"]["hits"] + st_["cache"]["coalesced"])
+        assert accounted == len(queries)
+        # re-asking is answered from the cache, preserving the tier label
+        again = svc.query_many(queries)
+        for a, b in zip(answers, again):
+            assert b.cached and b == a and b.tier == a.tier
+    finally:
+        svc.close()
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(0, 4),
+       st.floats(0.05, 2.0))
+@settings(max_examples=20, deadline=None)
+def test_surrogate_latency_monotone_in_each_knob(seed, knob, delta):
+    """The exact engine's latency is provably nondecreasing in every θ
+    knob (max/sum compositions of affine maps with nonnegative
+    coefficients); the surrogate's closed form is monotone BY
+    CONSTRUCTION (softplus-nonnegative path weights), so the property
+    must hold exactly, for every cell, at any point and step size."""
+    bundle = _tiny_bundle()
+    rng = np.random.default_rng(seed)
+    lo = np.exp(rng.uniform(np.log(0.25), np.log(4.0),
+                            bundle.n_knobs)).astype(np.float32)
+    knob = knob % bundle.n_knobs
+    hi = lo.copy()
+    hi[knob] = np.float32(min(4.0, hi[knob] + delta))
+    lat, _ = bundle.predict_rel(np.stack([lo, hi]))
+    assert np.all(lat[1] >= lat[0] - 1e-6 * np.abs(lat[0])), \
+        (knob, lo[knob], hi[knob], lat)
+
+
 @given(st.lists(st.integers(0, 255), min_size=1, max_size=60),
        st.integers(1, 4), st.integers(1, 4))
 @settings(**SETTINGS)

@@ -8,6 +8,7 @@ import os
 import pathlib
 import subprocess
 import sys
+import threading
 from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
@@ -235,6 +236,51 @@ def test_query_canonicalization():
     assert a == b and a.key == b.key and hash(a) == hash(b)
     assert Query.make(archs="oma").archs == ("oma",)
     assert a.override_map == {"x": 1.0, "y": 2.0}
+
+
+# -- shutdown: no leaked worker threads ---------------------------------------
+
+def test_close_is_idempotent(ex):
+    svc = DSEService(ex, pool=8, seed=1)
+    svc.query(workload="gemm")
+    svc.close()
+    svc.close()                 # second close is a no-op, not a hang/raise
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(workload="gemm")
+
+
+def test_close_during_hold_flushes_pending(ex):
+    """Regression: closing while a ``hold()`` was open used to deadlock
+    the worker (it waited for the hold to lift with items still pending).
+    A close now overrides the hold: pending futures resolve and the
+    worker joins."""
+    svc = DSEService(ex, pool=8, seed=1)
+    with svc.batcher.hold():
+        fut = svc.submit(workload="gemm")
+        svc.batcher.close(timeout=60.0)
+    assert fut.result(timeout=60.0).best_arch
+    assert not svc.batcher._worker.is_alive()
+
+
+def test_unclosed_service_leaves_no_joinable_threads(ex):
+    """Regression: a DSEService used WITHOUT close()/``with`` must not
+    leak anything interpreter shutdown can trip over — the worker is a
+    daemon (never blocks exit) AND registered in the atexit close set,
+    so shutdown flushes and joins it instead of racing its exceptions."""
+    from repro.serve import batcher as batcher_mod
+
+    svc = DSEService(ex, pool=8, seed=1)
+    svc.query(workload="gemm")
+    # no non-daemon "microbatcher" thread exists anywhere in the process
+    assert not any(t.name == "microbatcher" and not t.daemon
+                   for t in threading.enumerate())
+    assert svc.batcher._worker.daemon
+    # the atexit hook knows this batcher and closing it joins the worker
+    assert svc.batcher in batcher_mod._LIVE
+    batcher_mod._close_all()
+    svc.batcher._worker.join(timeout=30.0)
+    assert not svc.batcher._worker.is_alive()
+    assert svc.batcher not in batcher_mod._LIVE
 
 
 # -- sharded evaluation -------------------------------------------------------

@@ -1,0 +1,222 @@
+"""The surrogate tier (``repro.surrogate``) unit tests, on a cheap 2-cell
+explorer: the sweep-table export, fixed-seed training determinism,
+save/load round-trips, the θ = 1 anchor and confidence API, and the
+service integration (routing, per-tier stats, threaded == replay, and the
+mismatched-bundle fail-fast).  Accuracy against the full matrix is the
+oracle-chain tier's job (tests/test_oracle_chain.py)."""
+
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.core.aidg.explorer import (Explorer, default_scenarios,
+                                      random_candidates)
+from repro.serve import DSEService, Query
+from repro.surrogate import (SurrogateBundle, SurrogateConfig,
+                             evaluate_surrogate, train_surrogate)
+
+# reduced budget: these tests exercise mechanics, not accuracy bars
+CFG = SurrogateConfig(n_samples=64, steps=400)
+
+
+@pytest.fixture(scope="module")
+def ex2():
+    """oma/gemm + systolic/gemm — two cells sharing a workload, so both
+    full-matrix and arch-subset queries resolve non-trivially."""
+    return Explorer(scenarios=default_scenarios()[:2])
+
+
+@pytest.fixture(scope="module")
+def bundle(ex2):
+    return train_surrogate(ex2, CFG)
+
+
+# -- the sweep-table export ---------------------------------------------------
+
+def test_export_training_table_shapes_and_baselines(ex2):
+    pm = ex2.packed_matrix()
+    kt = random_candidates(ex2.space, 5, seed=3, include_baseline=False)
+    table = pm.export_training_table(kt)
+    S = len(ex2.compiled)
+    assert table["theta"].shape == (5, ex2.space.n)
+    assert table["cycles"].shape == table["energy"].shape == (5, S)
+    assert np.all(table["cycles"] > 0) and np.all(table["energy"] > 0)
+    # the prepended θ = 1 row IS the baseline, from the same dispatch
+    c1, e1 = ex2.evaluate_full(np.ones((1, ex2.space.n), np.float32))
+    assert np.array_equal(table["cycles_base"], c1[0].astype(np.float64))
+    assert np.array_equal(table["energy_base"], e1[0].astype(np.float64))
+
+
+def test_export_chunked_matches_unchunked(ex2):
+    pm = ex2.packed_matrix()
+    kt = random_candidates(ex2.space, 7, seed=4, include_baseline=False)
+    a = pm.export_training_table(kt)
+    b = pm.export_training_table(kt, chunk=3)
+    assert np.allclose(a["cycles"], b["cycles"], rtol=1e-6)
+    assert np.allclose(a["energy"], b["energy"], rtol=1e-6)
+
+
+# -- training, determinism, persistence ---------------------------------------
+
+def test_training_is_deterministic(ex2, bundle):
+    again = train_surrogate(ex2, CFG)
+    for k in bundle.params:
+        assert np.array_equal(np.asarray(bundle.params[k]),
+                              np.asarray(again.params[k])), k
+    assert np.array_equal(bundle.err_bound, again.err_bound)
+    assert bundle.meta == again.meta
+
+
+def test_bundle_metadata(ex2, bundle):
+    assert bundle.cell_names == tuple(cs.name for cs in ex2.compiled)
+    assert bundle.knob_names == tuple(ex2.space.names)
+    assert bundle.n_cells == 2 and bundle.n_knobs == ex2.space.n
+    assert bundle.meta["config"]["n_samples"] == CFG.n_samples
+    assert bundle.meta["n_train"] + bundle.meta["n_holdout"] \
+        == CFG.n_samples
+    assert np.all(bundle.err_bound > 0.0)
+
+
+def test_save_load_roundtrip(tmp_path, bundle):
+    path = tmp_path / "bundle.npz"
+    bundle.save(path)
+    loaded = SurrogateBundle.load(path)
+    assert loaded.cell_names == bundle.cell_names
+    assert loaded.knob_names == bundle.knob_names
+    assert loaded.meta == bundle.meta
+    assert np.array_equal(loaded.err_bound, bundle.err_bound)
+    kt = np.exp(np.random.default_rng(7).uniform(
+        -1.0, 1.0, (6, bundle.n_knobs))).astype(np.float32)
+    c0, e0 = bundle.predict_full(kt)
+    c1, e1 = loaded.predict_full(kt)
+    assert np.array_equal(c0, c1) and np.array_equal(e0, e1)
+
+
+def test_predict_anchored_at_theta_one(ex2, bundle):
+    """The θ = 1 row always trains, so the ratio prediction at θ = 1 sits
+    within the cell's own stated bound of exactly 1.0."""
+    lat, en = bundle.predict_rel(np.ones((1, bundle.n_knobs), np.float32))
+    assert lat.shape == en.shape == (1, 2)
+    assert np.all(np.abs(lat[0] - 1.0) <= bundle.err_bound)
+    assert np.all(np.abs(en[0] - 1.0) <= bundle.err_bound)
+
+
+def test_confident_api(bundle):
+    assert bundle.confident(max_err=10.0)
+    assert not bundle.confident(max_err=0.0)
+    assert bundle.confident(cols=[0], max_err=float(bundle.err_bound[0]))
+    assert not bundle.confident(cols=[], max_err=10.0)   # empty = never
+
+
+def test_latency_monotone_on_grid(bundle):
+    """Deterministic spot-check of the by-construction monotonicity (the
+    hypothesis sweep lives in test_property.py): raising any single knob
+    never lowers any cell's predicted latency ratio."""
+    base = np.full((1, bundle.n_knobs), 0.7, np.float32)
+    lat0, _ = bundle.predict_rel(base)
+    for k in range(bundle.n_knobs):
+        up = base.copy()
+        up[0, k] = 2.5
+        lat1, _ = bundle.predict_rel(up)
+        assert np.all(lat1 >= lat0 - 1e-6), k
+
+
+def test_evaluate_surrogate_report(ex2, bundle):
+    rep = evaluate_surrogate(bundle, ex2, n=16, seed=5)
+    assert rep["err_latency"].shape == rep["err_energy"].shape == (16, 2)
+    assert rep["cells"] == list(bundle.cell_names)
+    assert 0.0 <= rep["median_latency_err"] < 1.0
+    assert rep["bound_coverage"].shape == (2,)
+
+
+# -- service integration: the staged router -----------------------------------
+
+def test_service_routes_to_surrogate_tier(ex2, bundle):
+    with DSEService(ex2, pool=8, seed=1, surrogate=bundle,
+                    surrogate_max_err=10.0) as svc:
+        a = svc.query(workload="gemm")
+        assert a.tier == "surrogate"
+        assert 0.0 < a.err_bound <= 10.0
+        assert a.cells == ("oma/gemm", "systolic/gemm")
+        # the fast tier never touches the device-dispatch counters
+        assert svc.dispatched_candidates == 0
+        assert svc.evaluated_log == []
+        st = svc.stats()
+        assert st["surrogate_armed"] is True
+        assert st["tiers"] == {"cache": 0, "surrogate": 1, "packed": 0}
+        assert st["fallback_rate"] == 0.0
+        assert st["tier_time_s"]["surrogate"] > 0.0
+        assert st["tier_us_per_query"]["surrogate"] > 0.0
+        # a repeat is a cache hit that PRESERVES the tier label
+        b = svc.query(workload="gemm")
+        assert b.cached and b.tier == "surrogate" and b == a
+        assert svc.stats()["tiers"]["cache"] == 1
+
+
+def test_service_falls_back_when_bound_exceeded(ex2, bundle):
+    with DSEService(ex2, pool=8, seed=1, surrogate=bundle,
+                    surrogate_max_err=0.0) as svc:
+        a = svc.query(workload="gemm")
+        assert a.tier == "packed" and a.err_bound == 0.0
+        assert svc.dispatched_candidates == 8
+        st = svc.stats()
+        assert st["tiers"] == {"cache": 0, "surrogate": 0, "packed": 1}
+        assert st["fallback_rate"] == 1.0
+
+
+def test_service_without_surrogate_is_packed_only(ex2):
+    with DSEService(ex2, pool=8, seed=1) as svc:
+        a = svc.query(workload="gemm")
+        assert a.tier == "packed"
+        st = svc.stats()
+        assert st["surrogate_armed"] is False
+        assert st["fallback_rate"] == 1.0
+
+
+def test_surrogate_answers_match_packed_structure(ex2, bundle):
+    """Same query through both tiers: identical resolved cells, the same
+    candidate pool behind every design, and latencies within a few
+    stated bounds of each other (the chain tier owns the tight bars)."""
+    q = Query.make(workload="gemm", top_k=3)
+    with DSEService(ex2, pool=8, seed=1, surrogate=bundle,
+                    surrogate_max_err=10.0) as fast:
+        a_sur = fast.query(q)
+    with DSEService(ex2, pool=8, seed=1) as slow:
+        a_pkd = slow.query(q)
+    assert a_sur.cells == a_pkd.cells
+    pool_thetas = {tuple(np.float32(v) for v in row)
+                   for row in random_candidates(ex2.space, 8, seed=1)}
+    for d in a_sur.designs:
+        assert tuple(np.float32(v) for v in d.theta) in pool_thetas
+    tol = 5.0 * float(bundle.err_bound.max())
+    assert a_sur.best.latency == pytest.approx(a_pkd.best.latency,
+                                               rel=max(tol, 0.05))
+
+
+def test_threaded_equals_replay_with_surrogate(ex2, bundle):
+    stream = [Query.make(workload="gemm"),
+              Query.make(workload="gemm", archs=["oma"]),
+              Query.make(workload="gemm", top_k=2),
+              Query.make(workload="gemm", overrides={"matrix": 2.0})] * 3
+    svc = DSEService(ex2, pool=8, seed=1, surrogate=bundle,
+                     surrogate_max_err=10.0, max_batch=3, window_s=0.002)
+    try:
+        with ThreadPoolExecutor(max_workers=4) as tp:
+            threaded = list(tp.map(svc.query, stream))
+    finally:
+        svc.close()
+    ref = DSEService(ex2, pool=8, seed=1, surrogate=bundle,
+                     surrogate_max_err=10.0, max_batch=3)
+    try:
+        replay = ref.query_many(stream)
+    finally:
+        ref.close()
+    assert threaded == replay
+    assert all(a.tier == "surrogate" for a in replay if not a.cached)
+
+
+def test_mismatched_bundle_fails_fast(bundle):
+    ex3 = Explorer(scenarios=default_scenarios()[:3])
+    with pytest.raises(ValueError, match="cells"):
+        DSEService(ex3, pool=8, surrogate=bundle)

@@ -40,6 +40,8 @@ MODULES = [
     "repro.serve.query",
     "repro.serve.batcher",
     "repro.serve.engine",
+    "repro.surrogate.model",
+    "repro.surrogate.train",
 ]
 
 

@@ -1,0 +1,115 @@
+#!/usr/bin/env python
+"""Train, calibrate, and evaluate the surrogate oracle tier — reproducibly.
+
+One fixed seed drives the whole pipeline (sweep sampling, parameter init,
+held-out split), so running this twice writes byte-identical artifacts:
+
+    PYTHONPATH=src python tools/train_surrogate.py --out artifacts/surrogate
+
+writes ``surrogate.npz`` (the deployable :class:`SurrogateBundle`) and
+``eval.json`` (fresh-sample error report), and prints the per-cell
+calibration table that ``docs/surrogate.md`` quotes.
+
+``--smoke`` is the CI mode: train a 1-cell surrogate (the first operator
+scenario) from the fixed seed and assert its fresh-sample error stays
+inside the stated confidence bound — a fast end-to-end regression of the
+train → calibrate → predict loop.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.aidg.explorer import (Explorer, default_scenarios)  # noqa: E402
+from repro.surrogate import (SurrogateConfig, evaluate_surrogate,  # noqa: E402
+                             train_surrogate)
+
+
+def build_explorer(args) -> Explorer:
+    """The training oracle: the full 31-cell matrix by default, the first
+    operator cell in ``--smoke`` mode, or a name-filtered subset."""
+    if args.smoke:
+        return Explorer(scenarios=default_scenarios()[:1])
+    if args.cells:
+        keep = [s for s in default_scenarios()
+                if any(pat in s.name for pat in args.cells)]
+        if not keep:
+            raise SystemExit(f"--cells {args.cells} matched no scenario")
+        return Explorer(scenarios=keep)
+    return Explorer(networks=True)
+
+
+def main(argv=None) -> int:
+    """CLI entry point; returns a process exit code."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=0,
+                    help="drives sampling, init, and the held-out split")
+    ap.add_argument("--samples", type=int, default=192,
+                    help="log-uniform sweep draws (row 0 is always θ=1)")
+    ap.add_argument("--steps", type=int, default=1500,
+                    help="AdamW steps (cosine-decayed lr)")
+    ap.add_argument("--out", type=Path, default=Path("artifacts/surrogate"),
+                    help="artifact directory (surrogate.npz + eval.json)")
+    ap.add_argument("--cells", nargs="*", default=None, metavar="SUBSTR",
+                    help="train only operator cells whose name contains "
+                         "any of these substrings (default: full matrix)")
+    ap.add_argument("--eval-n", type=int, default=48,
+                    help="fresh evaluation draws the training never saw")
+    ap.add_argument("--max-err", type=float, default=0.02,
+                    help="smoke mode: required median latency error bound")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: 1-cell train + error-bound assertion")
+    args = ap.parse_args(argv)
+
+    ex = build_explorer(args)
+    cfg = SurrogateConfig(seed=args.seed, n_samples=args.samples,
+                          steps=args.steps)
+    print(f"training surrogate: {len(ex.compiled)} cells, "
+          f"{cfg.n_samples} samples, {cfg.steps} steps, seed {cfg.seed}")
+    bundle = train_surrogate(ex, cfg)
+    report = evaluate_surrogate(bundle, ex, n=args.eval_n,
+                                seed=args.seed + 1234)
+
+    med_lat = np.median(report["err_latency"], axis=0)
+    med_en = np.median(report["err_energy"], axis=0)
+    print(f"{'cell':<34} {'bound':>7} {'med lat':>8} {'med en':>8} "
+          f"{'cover':>6}")
+    for i, name in enumerate(bundle.cell_names):
+        print(f"{name:<34} {bundle.err_bound[i]:>7.4f} {med_lat[i]:>8.4f} "
+              f"{med_en[i]:>8.4f} {report['bound_coverage'][i]:>6.2f}")
+    print(f"matrix-wide median latency err "
+          f"{report['median_latency_err']:.4f}, "
+          f"energy err {report['median_energy_err']:.4f}")
+
+    args.out.mkdir(parents=True, exist_ok=True)
+    bundle.save(args.out / "surrogate.npz")
+    summary = {
+        "cells": report["cells"],
+        "err_bound": bundle.err_bound.tolist(),
+        "median_latency_err": report["median_latency_err"],
+        "median_energy_err": report["median_energy_err"],
+        "median_latency_err_per_cell": med_lat.tolist(),
+        "median_energy_err_per_cell": med_en.tolist(),
+        "bound_coverage": np.asarray(report["bound_coverage"]).tolist(),
+        "config": bundle.meta.get("config", {}),
+    }
+    (args.out / "eval.json").write_text(json.dumps(summary, indent=2))
+    print(f"wrote {args.out / 'surrogate.npz'} and {args.out / 'eval.json'}")
+
+    if args.smoke:
+        ok = report["median_latency_err"] <= args.max_err
+        print(f"smoke: median latency err {report['median_latency_err']:.4f}"
+              f" {'<=' if ok else '>'} required {args.max_err}")
+        return 0 if ok else 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
