@@ -22,6 +22,20 @@ Sections:
   and the measured fallback rate at the default confidence threshold.
   The small-budget row is guarded against the recorded snapshot
   (``benchmarks.baseline``), so fast-tier throughput regressions fail CI.
+* ``serve/degraded`` — graceful degradation throughput: the same cold
+  distinct-query stream served while the circuit breaker is latched
+  open (packed dispatch failing by fault plan, half-open probe out of
+  reach), so every answer comes from the surrogate tier stamped
+  ``tier="surrogate-degraded"`` with its widened bound.  The
+  small-budget row is guarded against the recorded snapshot — a
+  regression in degraded-mode throughput means the failure path got
+  slower, exactly when it matters.
+* ``serve/recovery`` — the full chaos arc measured end to end: a finite
+  fault window (transient dispatch errors) trips the breaker mid-
+  stream, queries degrade, then the shed -> half-open-probe walk is
+  timed until the first exact ``tier="packed"`` answer comes back;
+  reports breaker opens/sheds, degraded/failed counts, probe count and
+  time-to-recovery.
 * ``serve/sharded`` — ``PackedMatrix.evaluate(sharded=True)`` vs the
   single-device path on the same candidate batch: devices used, both
   throughputs, speedup, and bitwise agreement (always asserted).  When
@@ -137,7 +151,10 @@ def _bench_service(rows: List[Dict]) -> None:
 
 # -- the staged oracle hierarchy's fast tier ---------------------------------
 
-def _bench_surrogate(rows: List[Dict]) -> None:
+def _bench_surrogate(rows: List[Dict]):
+    """Benches the fast tier; returns ``(explorer, bundle)`` so the
+    fault-path benches reuse the trained surrogate instead of paying for
+    training twice."""
     from repro.core.aidg.explorer import Explorer
     from repro.serve import DSEService
     from repro.surrogate import SurrogateConfig, train_surrogate
@@ -205,6 +222,105 @@ def _bench_surrogate(rows: List[Dict]) -> None:
                 raise AssertionError(
                     f"cold surrogate stream produced a {a.tier!r} answer "
                     f"(err_bound={a.err_bound})")
+    return ex, bundle
+
+
+# -- the failure path: degraded throughput + chaos recovery ------------------
+
+def _bench_faults(rows: List[Dict], ex, bundle) -> None:
+    from repro.serve import (CircuitBreaker, DEGRADED_WIDEN, DSEService,
+                             Query, RetryPolicy, ServeError)
+
+    pool = 32 if SMALL else 128
+    kw = dict(pool=pool, chunk=pool, max_batch=8,
+              surrogate=bundle, surrogate_max_err=-1.0,  # packed routing
+              degraded_max_err=np.inf)
+    distinct = _query_stream(ex)
+    n = len(distinct)
+
+    # -- serve/degraded: breaker latched open, every cold query answered
+    # by the surrogate with its widened bound
+    def latched():
+        return DSEService(
+            ex, **kw, retry=RetryPolicy(max_attempts=1, base_s=0.0),
+            breaker=CircuitBreaker(open_after=1, probe_after=10 ** 9),
+            fault_plan="packed[0]=error")
+
+    with latched() as warm:               # compile the surrogate shapes
+        warm.query_many(distinct, return_exceptions=True)
+    svc = latched()
+    t0 = time.perf_counter()
+    answers = svc.query_many(distinct)
+    t_deg = time.perf_counter() - t0
+    st = svc.stats()
+    svc.close()
+    if SMALL:
+        for a in answers:
+            if a.tier != "surrogate-degraded" or a.err_bound <= 0.0:
+                raise AssertionError(
+                    f"latched-breaker stream produced a {a.tier!r} answer "
+                    f"(err_bound={a.err_bound})")
+        if st["tiers"]["surrogate-degraded"] != n:
+            raise AssertionError(
+                f"degraded tier accounted {st['tiers']} for {n} queries")
+    configs = n * pool * st["cells"]
+    rows.append({"name": "serve/degraded", "us_per_call": t_deg / n * 1e6,
+                 "derived": (f"queries={n};pool={pool};"
+                             f"cells={st['cells']};"
+                             f"deg_us_per_query={t_deg / n * 1e6:.0f};"
+                             f"configs_per_s={configs / t_deg:.0f};"
+                             f"widen={DEGRADED_WIDEN};"
+                             f"breaker={st['breaker']['state']};"
+                             f"breaker_shed={st['breaker']['shed']}")})
+
+    # -- serve/recovery: a finite fault window trips the breaker, then
+    # the shed -> probe walk is timed until packed answers return
+    plan = "packed[0:3]=error"
+    svc = DSEService(ex, **kw,
+                     retry=RetryPolicy(max_attempts=1, base_s=0.0),
+                     breaker=CircuitBreaker(open_after=1, probe_after=1),
+                     fault_plan=plan)
+    t0 = time.perf_counter()
+    outcomes = svc.query_many(distinct, return_exceptions=True)
+    probe = Query.make(workload=distinct[0].workload, top_k=17)
+    probes, recovered = 0, None
+    for _ in range(16):
+        # rejected opportunities come back as DEGRADED answers here (the
+        # surrogate covers everything), so walk until the first exact one
+        probes += 1
+        try:
+            out = svc.query_many([probe])[0]
+        except ServeError:
+            continue
+        if out.tier == "packed":
+            recovered = out
+            break
+    t_rec = time.perf_counter() - t0
+    st = svc.stats()
+    svc.close()
+    if len(outcomes) != n:
+        raise AssertionError(
+            f"{n} queries submitted under chaos, {len(outcomes)} resolved")
+    if recovered is None or recovered.tier != "packed":
+        raise AssertionError(
+            f"breaker never recovered to the packed tier under {plan!r} "
+            f"(state {st['breaker']['state']})")
+    if SMALL and st["breaker"]["opens"] < 1:
+        raise AssertionError(f"fault window {plan!r} never tripped the "
+                             f"breaker")
+    degraded = sum(1 for o in outcomes
+                   if not isinstance(o, BaseException)
+                   and o.tier == "surrogate-degraded")
+    rows.append({"name": "serve/recovery",
+                 "us_per_call": t_rec / (n + probes) * 1e6,
+                 "derived": (f"queries={n};plan={plan.replace(';', '|')};"
+                             f"degraded={degraded};"
+                             f"opens={st['breaker']['opens']};"
+                             f"breaker_shed={st['breaker']['shed']};"
+                             f"probes={probes};"
+                             f"retries={st['retries']};"
+                             f"recovered_tier={recovered.tier};"
+                             f"recovery_ms={t_rec * 1e3:.1f}")})
 
 
 # -- sharded probe ----------------------------------------------------------
@@ -299,11 +415,13 @@ def _bench_sharded(rows: List[Dict]) -> None:
 
 def run(rows: List[Dict]) -> None:
     _bench_service(rows)
-    _bench_surrogate(rows)
+    ex, bundle = _bench_surrogate(rows)
+    _bench_faults(rows, ex, bundle)
     _bench_sharded(rows)
     from .baseline import assert_baseline, guard_enabled
     if guard_enabled():
-        assert_baseline(rows, section="serve", names=("serve/surrogate",))
+        assert_baseline(rows, section="serve",
+                        names=("serve/surrogate", "serve/degraded"))
 
 
 if __name__ == "__main__":

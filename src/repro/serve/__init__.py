@@ -6,11 +6,34 @@ engine over the matrix-packed evaluator (see ``docs/serving.md``).
     with DSEService(networks=True, sharded=True) as svc:
         ans = svc.query(workload="gemm", archs=("gamma", "tpu_v5e"))
         print(ans.best_arch, ans.best.knobs(svc.space.names))
+
+Fault tolerance rides on top: :mod:`repro.serve.policy` (retry +
+circuit breaker), :mod:`repro.serve.faults` (deterministic fault
+injection), :mod:`repro.serve.errors` (the structured error taxonomy)
+and :mod:`repro.serve.frontend` (the length-prefixed-JSON RPC
+front-end with deadlines, admission control, and health probes).
 """
 
 from .batcher import MicroBatcher, plan_batches
-from .engine import DSEService
+from .engine import DEGRADED_WIDEN, DSEService
+from .errors import (DeadlineExceeded, InvalidQuery, OracleUnavailable,
+                     Overloaded, PoisonedDispatch, ServeError,
+                     TransientDispatchError, error_from_payload,
+                     error_payload)
+from .faults import (ENV_FAULT_PLAN, FaultAction, FaultInjector, FaultPlan,
+                     WorkerKill)
+from .frontend import ServeClient, ServeFrontend
+from .policy import CircuitBreaker, RetryPolicy
 from .query import Answer, Design, Query
 
-__all__ = ["DSEService", "MicroBatcher", "plan_batches",
-           "Query", "Design", "Answer"]
+__all__ = [
+    "DSEService", "DEGRADED_WIDEN", "MicroBatcher", "plan_batches",
+    "Query", "Design", "Answer",
+    "ServeError", "InvalidQuery", "Overloaded", "OracleUnavailable",
+    "DeadlineExceeded", "TransientDispatchError", "PoisonedDispatch",
+    "error_payload", "error_from_payload",
+    "RetryPolicy", "CircuitBreaker",
+    "FaultPlan", "FaultAction", "FaultInjector", "WorkerKill",
+    "ENV_FAULT_PLAN",
+    "ServeFrontend", "ServeClient",
+]

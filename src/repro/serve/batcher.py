@@ -66,9 +66,15 @@ class MicroBatcher:
     """One worker thread turning concurrent ``submit`` calls into bounded
     arrival-ordered dispatches (see the module docstring for the
     contract).  ``dispatch`` maps a list of items to a list of results of
-    the same length; an exception from it fails every future in the
-    batch.  ``dispatch_log`` records the sequence numbers of every batch,
-    in dispatch order — the partition evidence tests assert on."""
+    the same length; a result element that is itself an exception fails
+    ONLY that item's future (per-item structured errors), while an
+    exception raised by ``dispatch`` fails every future in the batch —
+    and a non-``Exception`` ``BaseException`` (``KeyboardInterrupt``,
+    ``SystemExit``, injected ``WorkerKill``) additionally re-raises after
+    failing the futures, so the worker dies instead of swallowing it; the
+    forwarded exception carries the window's items as ``batch_items``.
+    ``dispatch_log`` records the sequence numbers of every batch, in
+    dispatch order — the partition evidence tests assert on."""
 
     def __init__(self, dispatch: Callable[[List], List],
                  max_batch: int = 8, window_s: float = 0.002):
@@ -81,26 +87,53 @@ class MicroBatcher:
         self.window_s = float(window_s)
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
-        self._pending: List[Tuple[int, object, Future]] = []
+        self._pending: List[Tuple[int, object, Future,
+                                  Optional[float]]] = []
         self._seq = 0
         self._held = 0
         self._in_flight = 0
         self._closed = False
         self.dispatch_log: List[List[int]] = []
-        self._worker = threading.Thread(target=self._run, daemon=True,
-                                        name="microbatcher")
-        self._worker.start()
+        self.cancelled = 0              # futures cancelled before dispatch
+        self.worker_restarts = 0        # respawns after a worker death
+        self._dead = False              # worker announced its own death
+        self._window_open = time.monotonic()
+        self._worker = self._spawn_worker()
         _LIVE.add(self)
+
+    def _spawn_worker(self) -> threading.Thread:
+        worker = threading.Thread(target=self._run, daemon=True,
+                                  name="microbatcher")
+        worker.start()
+        return worker
+
+    def _ensure_worker(self) -> None:
+        """Worker supervision (caller must hold the lock): a worker
+        killed mid-dispatch by a ``BaseException`` (injected
+        ``WorkerKill``, a stray ``SystemExit``) is respawned so the
+        batcher keeps serving instead of stranding every later
+        submission.  The worker flags ``_dead`` under the lock BEFORE it
+        re-raises, so a submit racing its unwind (``is_alive()`` still
+        true) respawns rather than enqueuing onto a corpse."""
+        if not self._closed and (self._dead or not self._worker.is_alive()):
+            self.worker_restarts += 1
+            self._dead = False
+            self._worker = self._spawn_worker()
 
     # -- client side --------------------------------------------------------
 
-    def submit(self, item) -> Future:
-        """Enqueue one item; returns the future its result will resolve."""
+    def submit(self, item, deadline: Optional[float] = None) -> Future:
+        """Enqueue one item; returns the future its result will resolve.
+        ``deadline`` (absolute ``time.monotonic()`` seconds) closes the
+        item's window no later than that instant — a tight per-query
+        deadline shortens its window instead of waiting out
+        ``window_s``."""
         fut: Future = Future()
         with self._cond:
             if self._closed:
                 raise RuntimeError("MicroBatcher is closed")
-            self._pending.append((self._seq, item, fut))
+            self._ensure_worker()
+            self._pending.append((self._seq, item, fut, deadline))
             self._seq += 1
             self._cond.notify_all()
         return fut
@@ -122,14 +155,16 @@ class MicroBatcher:
     def drain(self, timeout: float = 30.0) -> None:
         """Block until every already-submitted item has been dispatched
         AND its future resolved (the dispatch log is complete up to the
-        last pre-drain submission when this returns)."""
-        deadline = time.monotonic() + timeout
+        last pre-drain submission when this returns).  Purely
+        event-driven: the waiter sleeps on the condition until the worker
+        settles the last batch (``Condition.wait_for`` — no deadline
+        polling loop burning a core under load)."""
         with self._cond:
-            while self._pending or self._in_flight:
-                left = deadline - time.monotonic()
-                if left <= 0:
-                    raise TimeoutError("MicroBatcher.drain timed out")
-                self._cond.wait(left)
+            self._ensure_worker()
+            done = self._cond.wait_for(
+                lambda: not self._pending and not self._in_flight, timeout)
+            if not done:
+                raise TimeoutError("MicroBatcher.drain timed out")
 
     def close(self, timeout: Optional[float] = None) -> None:
         """Dispatch whatever is pending, then stop the worker thread.
@@ -139,6 +174,11 @@ class MicroBatcher:
         still flush rather than deadlocking the worker).  ``timeout``
         bounds the join; ``None`` waits until the worker exits."""
         with self._cond:
+            # a dead worker (BaseException mid-dispatch) with items still
+            # queued gets one last respawn so close() flushes rather than
+            # stranding those futures
+            if self._pending:
+                self._ensure_worker()
             self._closed = True
             self._cond.notify_all()
         if self._worker is not threading.current_thread():
@@ -153,17 +193,31 @@ class MicroBatcher:
 
     # -- worker side --------------------------------------------------------
 
-    def _take_batch(self) -> List[Tuple[int, object, Future]]:
+    def _take_batch(self) -> List[Tuple[int, object, Future,
+                                        Optional[float]]]:
         """Wait for a window to close, then pop the next FIFO batch: at
         most ``max_batch`` items, no earlier than ``window_s`` after the
-        window's first item arrived (unless the batch is already full, or
-        the batcher is closing)."""
+        window's first item arrived — or the earliest per-item deadline
+        in the forming batch, whichever comes first (unless the batch is
+        already full, or the batcher is closing).  Items whose futures
+        were cancelled while queued are dropped here, before dispatch."""
         with self._cond:
             while True:
+                # reap cancel()ed futures: they must neither be dispatched
+                # nor keep a window open waiting on them
+                live = [p for p in self._pending if not p[2].cancelled()]
+                if len(live) != len(self._pending):
+                    self.cancelled += len(self._pending) - len(live)
+                    self._pending[:] = live
+                    if not live:
+                        self._cond.notify_all()   # wake drain()
                 # a close overrides any open hold(): pending items must
                 # still flush or the worker (and its joiner) deadlocks
                 if self._pending and (not self._held or self._closed):
                     deadline = self._window_open + self.window_s
+                    for _, _, _, item_dl in self._pending[: self.max_batch]:
+                        if item_dl is not None:
+                            deadline = min(deadline, item_dl)
                     if (len(self._pending) >= self.max_batch
                             or self._closed
                             or time.monotonic() >= deadline):
@@ -182,29 +236,65 @@ class MicroBatcher:
                     self._cond.wait()
                     self._window_open = time.monotonic()
 
+    @staticmethod
+    def _resolve(fut: Future, res: object) -> None:
+        """Settle one future defensively: a result that IS an exception
+        fails the future (per-item structured errors from the dispatch
+        function), and a future cancelled mid-dispatch is left alone
+        (its submitter already walked away — the outcome is accounted,
+        not crashed on)."""
+        if fut.cancelled():
+            return
+        if isinstance(res, BaseException):
+            fut.set_exception(res)
+        else:
+            fut.set_result(res)
+
     def _run(self) -> None:
-        self._window_open = time.monotonic()
         while True:
             batch = self._take_batch()
             if not batch:
                 return
-            self._window_open = time.monotonic()
-            items = [it for _, it, _ in batch]
+            with self._cond:
+                self._window_open = time.monotonic()
+            items = [it for _, it, _, _ in batch]
             try:
                 results = self._dispatch(items)
                 if len(results) != len(items):
                     raise RuntimeError(
                         f"dispatch returned {len(results)} results for "
                         f"{len(items)} items")
-            except Exception as e:     # noqa: BLE001 — forwarded to futures
-                self.dispatch_log.append([seq for seq, _, _ in batch])
-                for _, _, fut in batch:
-                    fut.set_exception(e)
+            except BaseException as e:  # noqa: BLE001 — forwarded, see below
+                # diagnosability: the forwarded exception names exactly
+                # which window died with it
+                try:
+                    e.batch_items = tuple(items)
+                except Exception:       # __slots__ exceptions: best-effort
+                    pass
+                self.dispatch_log.append([seq for seq, *_ in batch])
+                for _, _, fut, _ in batch:
+                    self._resolve(fut, e)
                 self._settle()
+                if not isinstance(e, Exception):
+                    # KeyboardInterrupt / SystemExit / injected WorkerKill:
+                    # fail the batch's futures (no client may hang) but
+                    # NEVER swallow a BaseException into them — re-raise
+                    # so the worker dies loudly.  Items already queued
+                    # behind the dead window would otherwise strand (no
+                    # later submit to trigger supervision), so the dying
+                    # worker spawns its own successor when work remains;
+                    # an idle batcher stays dead until the next submit.
+                    with self._cond:
+                        self._dead = True
+                        if self._pending and not self._closed:
+                            self.worker_restarts += 1
+                            self._dead = False
+                            self._worker = self._spawn_worker()
+                    raise
                 continue
-            self.dispatch_log.append([seq for seq, _, _ in batch])
-            for (_, _, fut), res in zip(batch, results):
-                fut.set_result(res)
+            self.dispatch_log.append([seq for seq, *_ in batch])
+            for (_, _, fut, _), res in zip(batch, results):
+                self._resolve(fut, res)
             self._settle()
 
     def _settle(self) -> None:

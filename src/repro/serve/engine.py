@@ -31,18 +31,42 @@ arrival order, batching, cache state, or sharding — asserted by
 
 from __future__ import annotations
 
+import os
 import threading
 import time
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from concurrent.futures import TimeoutError as _FutureTimeout
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from ..core.aidg.explorer import (Explorer, pareto_front, random_candidates,
                                   resolve_cells, scenario_cache_stats)
 from .batcher import MicroBatcher, plan_batches
+from .errors import (DeadlineExceeded, OracleUnavailable, PoisonedDispatch,
+                     TransientDispatchError)
+from .faults import ENV_FAULT_PLAN, FaultInjector, FaultPlan, WorkerKill
+from .policy import CircuitBreaker, RetryPolicy
 from .query import Answer, Design, Query
 
-__all__ = ["DSEService"]
+__all__ = ["DSEService", "DEGRADED_WIDEN"]
+
+# degraded answers stamp their bound wider than the surrogate's calibrated
+# one: while the breaker is open the service also serves cells whose
+# bounds would normally fail the routing threshold, so the stated
+# contract carries an explicit extra safety factor
+DEGRADED_WIDEN = 2.0
+
+
+@dataclass(frozen=True)
+class _Submission:
+    """One enqueued query plus its submit-time metadata.  The deadline is
+    deliberately NOT part of the query: two clients asking the same
+    question with different deadlines must still coalesce onto one
+    computation and one cache entry."""
+
+    query: Query
+    deadline: Optional[float] = None     # absolute time.monotonic seconds
 
 
 class DSEService:
@@ -68,6 +92,20 @@ class DSEService:
     and falls back to the exact packed dispatch otherwise; per-tier
     answer counts, per-tier latency, and the fallback rate are reported
     by :meth:`stats`.
+    ``retry`` / ``breaker``: the failure policy over the packed dispatch
+    (:mod:`repro.serve.policy`) — transient dispatch failures retry with
+    jittered exponential backoff, and ``open_after`` consecutive
+    exhausted dispatches open the circuit breaker; while it is open,
+    queries with calibrated surrogate coverage (every resolved cell's
+    bound at or under ``degraded_max_err``) are answered
+    ``tier="surrogate-degraded"`` with a :data:`DEGRADED_WIDEN`-widened
+    bound stamped on the answer, and the rest fail fast with
+    :class:`~repro.serve.errors.OracleUnavailable` instead of queuing
+    behind a dead oracle.  Degraded and failed outcomes are never
+    cached, so recovery restores exact ``tier="packed"`` answers.
+    ``fault_plan``: a :class:`repro.serve.faults.FaultPlan` (or spec
+    string) injecting deterministic dispatch faults for tests/chaos runs;
+    defaults to the ``SERVE_FAULT_PLAN`` environment variable.
     """
 
     def __init__(self, explorer: Optional[Explorer] = None, *,
@@ -77,7 +115,11 @@ class DSEService:
                  max_batch: int = 8, window_s: float = 0.002,
                  sharded: bool = False, n_devices: Optional[int] = None,
                  chunk: Optional[int] = None,
-                 surrogate=None, surrogate_max_err: float = 0.02):
+                 surrogate=None, surrogate_max_err: float = 0.02,
+                 retry: Optional[RetryPolicy] = None,
+                 breaker: Optional[CircuitBreaker] = None,
+                 fault_plan: Union[FaultPlan, str, None] = None,
+                 degraded_max_err: float = float("inf")):
         if explorer is None:
             explorer = Explorer(scenarios=scenarios, networks=networks)
         self.explorer = explorer
@@ -93,14 +135,28 @@ class DSEService:
         self.chunk = chunk
         self.surrogate = self._check_surrogate(surrogate)
         self.surrogate_max_err = float(surrogate_max_err)
+        self.degraded_max_err = float(degraded_max_err)
+        self.retry = retry if retry is not None else RetryPolicy(seed=seed)
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
+        if fault_plan is None:
+            fault_plan = os.environ.get(ENV_FAULT_PLAN) or None
+        if isinstance(fault_plan, str):
+            fault_plan = FaultPlan.parse(fault_plan)
+        self.fault_plan = fault_plan
+        self.faults = None if fault_plan is None else FaultInjector(fault_plan)
         self._lock = threading.Lock()
         self._cache: Dict[Tuple, Answer] = {}
         self.cache_stats = {"hits": 0, "misses": 0, "coalesced": 0}
         self._resolved: Dict[Tuple, Tuple[Tuple[str, ...], np.ndarray]] = {}
         self._sur_ok: Dict[Tuple, bool] = {}
         self.dispatched_candidates = 0
-        self.tier_counts = {"surrogate": 0, "packed": 0}
-        self.tier_time_s = {"surrogate": 0.0, "packed": 0.0}
+        self.tier_counts = {"surrogate": 0, "packed": 0,
+                            "surrogate-degraded": 0, "failed": 0}
+        self.tier_time_s = {"surrogate": 0.0, "packed": 0.0,
+                            "surrogate-degraded": 0.0}
+        self.timeouts = 0               # query() timeouts (leak-accounted)
+        self.deadline_misses = 0        # submissions expired pre-evaluation
+        self.retries = 0                # packed attempts beyond the first
         # every window that reached _dispatch (threaded OR replay), as
         # query keys; and the deduped keys each DEVICE dispatch evaluated
         self.window_log: List[List[Tuple]] = []
@@ -132,32 +188,76 @@ class DSEService:
 
     # -- client surface -----------------------------------------------------
 
-    def submit(self, query: Optional[Query] = None, **kwargs):
+    def submit(self, query: Optional[Query] = None,
+               deadline_s: Optional[float] = None, **kwargs):
         """Enqueue one query into the current micro-batch window; returns
         a future resolving to its :class:`Answer`.  Accepts either a
         :class:`Query` or ``Query.make`` keyword arguments.  Resolution
         and override validation happen HERE, in the caller — a malformed
-        query fails fast and can never poison its window's batchmates."""
+        query fails fast and can never poison its window's batchmates.
+
+        ``deadline_s`` (relative seconds) propagates into the micro-batch
+        window: the query's window closes no later than HALF its budget
+        (closing at the deadline itself would leave the evaluation no
+        time at all — shortening the window early only costs batching
+        efficiency, never correctness), and a query still unanswered when
+        its deadline passes fails with
+        :class:`~repro.serve.errors.DeadlineExceeded` instead of being
+        evaluated for nobody."""
         q = self._canonical(query, kwargs)
         self._resolve(q)               # validates workload/arch subset
         self._override_columns(q)      # validates knob names + bounds
-        return self.batcher.submit(q)
+        now = time.monotonic()
+        deadline = None if deadline_s is None else now + float(deadline_s)
+        window_close = (None if deadline_s is None
+                        else now + float(deadline_s) / 2.0)
+        return self.batcher.submit(_Submission(q, deadline),
+                                   deadline=window_close)
 
     def query(self, query: Optional[Query] = None, timeout: float = 120.0,
-              **kwargs) -> Answer:
-        """Blocking ``submit``: one answer, through the shared window."""
-        return self.submit(query, **kwargs).result(timeout=timeout)
+              deadline_s: Optional[float] = None, **kwargs) -> Answer:
+        """Blocking ``submit``: one answer, through the shared window.
 
-    def query_many(self, queries: Sequence[Query]) -> List[Answer]:
+        A timeout no longer leaks the enqueued future: the future is
+        cancelled (the batcher drops cancelled items before dispatch) or,
+        when already past cancellation, its eventual outcome is consumed
+        so nothing dangles — either way the ``timeouts`` counter in
+        :meth:`stats` accounts for it, and the raised error is the
+        structured :class:`~repro.serve.errors.DeadlineExceeded` (a
+        ``TimeoutError`` subclass, so existing callers keep working)."""
+        if deadline_s is not None:
+            timeout = min(timeout, float(deadline_s))
+        fut = self.submit(query, deadline_s=deadline_s, **kwargs)
+        try:
+            return fut.result(timeout=timeout)
+        except _FutureTimeout:
+            with self._lock:
+                self.timeouts += 1
+            if not fut.cancel():
+                # already running/done: consume the eventual outcome so
+                # the dropped result is accounted, not silently leaked
+                fut.add_done_callback(
+                    lambda f: f.cancelled() or f.exception())
+            raise DeadlineExceeded(
+                f"no answer within {timeout:g}s", timeout_s=timeout) from None
+
+    def query_many(self, queries: Sequence[Query],
+                   return_exceptions: bool = False) -> List[Answer]:
         """Sequential replay oracle: the same queries through the same
         dispatch path, coalesced by the same FIFO plan the worker thread
         uses (``plan_batches``) but synchronously in the caller — the
         reference answers the concurrency/determinism tests compare the
-        threaded path against."""
-        queries = [self._canonical(q, {}) for q in queries]
+        threaded path against.  With ``return_exceptions`` (the replay
+        mode fault tests use), per-query structured errors come back in
+        place of answers instead of raising on the first one."""
+        subs = [_Submission(self._canonical(q, {})) for q in queries]
         out: List[Answer] = []
-        for s, e in plan_batches(len(queries), self.batcher.max_batch):
-            out.extend(self._dispatch(queries[s:e]))
+        for s, e in plan_batches(len(subs), self.batcher.max_batch):
+            out.extend(self._dispatch(subs[s:e]))
+        if not return_exceptions:
+            for o in out:
+                if isinstance(o, BaseException):
+                    raise o
         return out
 
     def close(self) -> None:
@@ -180,7 +280,10 @@ class DSEService:
         per-query latency (``tier_time_s`` / ``tier_us_per_query``), and
         the ``fallback_rate`` (fraction of fresh queries the surrogate
         tier had to hand to the exact packed dispatch; 1.0 when no
-        surrogate is armed)."""
+        surrogate is armed) — plus the failure-semantics counters: the
+        circuit ``breaker`` snapshot, ``retries``, ``timeouts``,
+        ``deadline_misses``, and the batcher's ``cancelled`` /
+        ``worker_restarts``."""
         with self._lock:
             cs = dict(self.cache_stats)
             cand = self.dispatched_candidates
@@ -189,6 +292,9 @@ class DSEService:
             device = len(self.evaluated_log)
             tiers = dict(self.tier_counts)
             tier_time = dict(self.tier_time_s)
+            timeouts = self.timeouts
+            deadline_misses = self.deadline_misses
+            retries = self.retries
         fresh = tiers["surrogate"] + tiers["packed"]
         return {
             "cache": cs,
@@ -212,9 +318,17 @@ class DSEService:
             "tiers": {"cache": cs["hits"], **tiers},
             "tier_time_s": tier_time,
             "tier_us_per_query": {
-                t: tier_time[t] / tiers[t] * 1e6 if tiers[t] else 0.0
-                for t in tiers},
+                t: tier_time[t] / tiers[t] * 1e6 if tiers.get(t) else 0.0
+                for t in tier_time},
             "fallback_rate": tiers["packed"] / fresh if fresh else 0.0,
+            "breaker": self.breaker.snapshot(),
+            "retries": retries,
+            "timeouts": timeouts,
+            "deadline_misses": deadline_misses,
+            "cancelled": self.batcher.cancelled,
+            "worker_restarts": self.batcher.worker_restarts,
+            "fault_plan": (self.fault_plan.to_spec()
+                           if self.fault_plan is not None else None),
         }
 
     # -- resolution ---------------------------------------------------------
@@ -266,26 +380,39 @@ class DSEService:
 
     # -- the coalesced dispatch --------------------------------------------
 
-    def _dispatch(self, queries: List[Query]) -> List[Answer]:
+    def _dispatch(self, submissions: List) -> List:
         """One micro-batch window through the staged oracle hierarchy.
 
-        Cache hits answer immediately; the remaining queries are deduped
-        by key (same-window duplicates coalesce onto one computation),
-        routed to the surrogate tier when eligible
+        Submissions already past their deadline fail immediately with
+        :class:`DeadlineExceeded` (counted ``deadline_misses``) — they
+        never reach an oracle.  Cache hits answer next; the remaining
+        queries are deduped by key (same-window duplicates coalesce onto
+        one computation), routed to the surrogate tier when eligible
         (:meth:`_surrogate_answers`), and the rest grouped by override
         signature (same overrides = same candidate block, evaluated
         once) into ONE stacked ``PackedMatrix`` dispatch (sharded over
-        devices when configured).  Per-candidate rows are independent,
-        so stacking order cannot change any query's answer.
+        devices when configured) behind the retry policy and circuit
+        breaker.  Per-candidate rows are independent, so stacking order
+        cannot change any query's answer.  The returned list holds one
+        outcome per submission — an :class:`Answer` or a structured
+        error (the batcher fails exactly that item's future with it).
         """
+        subs = [s if isinstance(s, _Submission) else _Submission(s)
+                for s in submissions]
+        now = time.monotonic()
         with self._lock:
-            answers: Dict[Tuple, Answer] = {}
-            order: List[Tuple] = []
+            outcomes: List[Optional[object]] = [None] * len(subs)
+            answers: Dict[Tuple, object] = {}
             fresh: Dict[Tuple, Query] = {}
-            self.window_log.append([q.key for q in queries])
-            for q in queries:
-                order.append(q.key)
-                if q.key in answers or q.key in fresh:
+            self.window_log.append([s.query.key for s in subs])
+            for i, sub in enumerate(subs):
+                q = sub.query
+                if sub.deadline is not None and now > sub.deadline:
+                    self.deadline_misses += 1
+                    outcomes[i] = DeadlineExceeded(
+                        f"query expired {now - sub.deadline:.3f}s before "
+                        f"evaluation", workload=q.workload)
+                elif q.key in answers or q.key in fresh:
                     self.cache_stats["coalesced"] += 1
                 elif q.key in self._cache:
                     self.cache_stats["hits"] += 1
@@ -311,7 +438,8 @@ class DSEService:
             if packed:
                 self._answer_packed(packed, answers)
 
-        return [answers[k] for k in order]
+        return [o if o is not None else answers[s.query.key]
+                for o, s in zip(outcomes, subs)]
 
     def _surrogate_answers(self, q: Query) -> bool:
         """True when the armed surrogate's calibrated per-cell bounds
@@ -329,13 +457,18 @@ class DSEService:
         return ok
 
     def _answer_surrogate(self, group: Dict[Tuple, Query],
-                          answers: Dict[Tuple, Answer]) -> None:
+                          answers: Dict[Tuple, object],
+                          degraded: bool = False) -> None:
         """Fast tier: each distinct override signature's candidate block
         goes through the bundle's jitted predictor at the fixed (pool,
         n_knobs) shape — no stacking, so every call reuses one compiled
         shape; the device-dispatch counters (``dispatched_candidates``,
         ``evaluated_log``) are deliberately NOT touched, they count exact
-        packed work only."""
+        packed work only.  In ``degraded`` mode (circuit breaker open)
+        answers are stamped ``tier="surrogate-degraded"`` with the
+        :data:`DEGRADED_WIDEN`-widened bound and are NOT cached — once
+        the breaker closes, the same question gets an exact answer."""
+        tier = "surrogate-degraded" if degraded else "surrogate"
         t0 = time.perf_counter()
         blocks: Dict[Tuple, np.ndarray] = {}
         preds: Dict[Tuple, Tuple[np.ndarray, np.ndarray]] = {}
@@ -348,29 +481,50 @@ class DSEService:
             for key, q in group.items():
                 cycles, energy = preds[q.overrides]
                 ans = self._rank(q, blocks[q.overrides], cycles, energy,
-                                 tier="surrogate")
+                                 tier=tier)
                 answers[key] = ans
-                self._cache[key] = ans
-            self.tier_counts["surrogate"] += len(group)
-            self.tier_time_s["surrogate"] += time.perf_counter() - t0
+                if not degraded:
+                    self._cache[key] = ans
+            self.tier_counts[tier] += len(group)
+            self.tier_time_s[tier] += time.perf_counter() - t0
 
     def _answer_packed(self, group: Dict[Tuple, Query],
-                       answers: Dict[Tuple, Answer]) -> None:
+                       answers: Dict[Tuple, object]) -> None:
         """Exact tier: one candidate block per distinct override
         signature, stacked along the candidate axis and evaluated in ONE
-        ``PackedMatrix`` dispatch (sharded over devices when configured).
-        Per-candidate rows are independent, so stacking order cannot
-        change any query's answer."""
+        ``PackedMatrix`` dispatch (sharded over devices when configured)
+        behind the retry policy and circuit breaker.  Per-candidate rows
+        are independent, so stacking order cannot change any query's
+        answer.  When the breaker is open — or a dispatch exhausts its
+        retry budget — the whole group degrades
+        (:meth:`_answer_degraded`) instead of queuing behind the dead
+        oracle."""
         t0 = time.perf_counter()
+        if not self.breaker.allow():
+            self._answer_degraded(group, answers, "circuit breaker open")
+            return
         blocks: Dict[Tuple, np.ndarray] = {}
         for q in group.values():
             if q.overrides not in blocks:
                 blocks[q.overrides] = self._candidates_for(q)
         sigs = list(blocks)
         stacked = np.concatenate([blocks[s] for s in sigs], axis=0)
-        cycles, energy = self.explorer.evaluate_full(
-            stacked, chunk=self.chunk, sharded=self.sharded,
-            n_devices=self.n_devices)
+        try:
+            cycles, energy = self._packed_evaluate(stacked)
+        except TransientDispatchError as e:
+            self.breaker.record_failure()
+            self._answer_degraded(group, answers,
+                                  f"packed dispatch failed: {e}")
+            return
+        except BaseException:
+            # a non-transient dispatch death (WorkerKill, SystemExit)
+            # must still resolve the breaker's admitted attempt — a
+            # half-open probe that died silently would otherwise leave
+            # the breaker shedding forever; the exception itself keeps
+            # propagating (the batcher fails the window's futures)
+            self.breaker.record_failure()
+            raise
+        self.breaker.record_success()
         starts = dict(zip(sigs, np.cumsum(
             [0] + [blocks[s].shape[0] for s in sigs[:-1]])))
         with self._lock:
@@ -386,6 +540,74 @@ class DSEService:
                 self._cache[key] = ans
             self.tier_counts["packed"] += len(group)
             self.tier_time_s["packed"] += time.perf_counter() - t0
+
+    def _packed_evaluate(self, stacked: np.ndarray
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        """One guarded oracle call: fault injection (when a plan is
+        armed), output validation (a "successful" dispatch returning
+        non-finite numbers is a :class:`PoisonedDispatch`, not an
+        answer), and retry-with-backoff around both.  Raises the last
+        :class:`TransientDispatchError` once the budget is spent."""
+        def attempt() -> Tuple[np.ndarray, np.ndarray]:
+            poisoned = False
+            if self.faults is not None:
+                n, act = self.faults.next("packed")
+                if act.latency_s:
+                    time.sleep(act.latency_s)
+                if act.kind == "error":
+                    raise TransientDispatchError(
+                        f"injected dispatch fault at attempt {n}", attempt=n)
+                if act.kind == "kill":
+                    raise WorkerKill(f"injected worker kill at attempt {n}")
+                poisoned = act.kind == "poison"
+            if poisoned:
+                # the oracle "returns", but its payload is garbage
+                shape = (stacked.shape[0], len(self.explorer.compiled))
+                cycles = np.full(shape, np.nan, np.float32)
+                energy = np.full(shape, np.nan, np.float32)
+            else:
+                cycles, energy = self.explorer.evaluate_full(
+                    stacked, chunk=self.chunk, sharded=self.sharded,
+                    n_devices=self.n_devices)
+            if not (np.isfinite(cycles).all() and np.isfinite(energy).all()):
+                raise PoisonedDispatch(
+                    "packed dispatch returned non-finite cycles/energy")
+            return cycles, energy
+
+        def on_retry(_e: BaseException) -> None:
+            with self._lock:
+                self.retries += 1
+
+        return self.retry.call(attempt, retry_on=(TransientDispatchError,),
+                               on_retry=on_retry)
+
+    def _answer_degraded(self, group: Dict[Tuple, Query],
+                         answers: Dict[Tuple, object], reason: str) -> None:
+        """Graceful degradation down the oracle hierarchy: with the
+        packed oracle unreachable, queries whose every resolved cell has
+        a calibrated surrogate bound at or under ``degraded_max_err``
+        are still answered — ``tier="surrogate-degraded"``, widened
+        bound stamped — and the rest fail fast with a structured
+        :class:`OracleUnavailable` instead of queuing behind a dead
+        dispatch.  Neither outcome is cached."""
+        cover: Dict[Tuple, Query] = {}
+        for key, q in group.items():
+            _, cols = self._resolve(q)
+            covered = (self.surrogate is not None and bool(
+                np.all(np.isfinite(self.surrogate.err_bound[cols])
+                       & (self.surrogate.err_bound[cols]
+                          <= self.degraded_max_err))))
+            if covered:
+                cover[key] = q
+            else:
+                with self._lock:
+                    self.tier_counts["failed"] += 1
+                answers[key] = OracleUnavailable(
+                    f"packed oracle unavailable ({reason}) and query has "
+                    f"no calibrated surrogate coverage",
+                    breaker=self.breaker.state, workload=q.workload)
+        if cover:
+            self._answer_surrogate(cover, answers, degraded=True)
 
     def _rank(self, q: Query, cand: np.ndarray, cycles: np.ndarray,
               energy_pj: np.ndarray, tier: str = "packed") -> Answer:
@@ -412,7 +634,11 @@ class DSEService:
         lead = int(top[0]) if len(top) else int(np.argmin(latency))
         best_cell = int(np.argmin(rel[lead]))
         best_arch = self.explorer.compiled[int(cols[best_cell])].arch
-        err = (float(self.surrogate.err_bound[cols].max())
-               if tier == "surrogate" else 0.0)
+        if tier == "surrogate":
+            err = float(self.surrogate.err_bound[cols].max())
+        elif tier == "surrogate-degraded":
+            err = DEGRADED_WIDEN * float(self.surrogate.err_bound[cols].max())
+        else:
+            err = 0.0
         return Answer(query=q, cells=names, designs=designs,
                       best_arch=best_arch, tier=tier, err_bound=err)

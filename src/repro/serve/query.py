@@ -83,6 +83,21 @@ class Query:
         """The overrides as a plain dict (knob name -> pinned θ)."""
         return dict(self.overrides)
 
+    def to_payload(self) -> Dict[str, object]:
+        """JSON-safe wire form (the RPC front-end's request body)."""
+        return {"workload": self.workload,
+                "archs": None if self.archs is None else list(self.archs),
+                "overrides": {k: v for k, v in self.overrides},
+                "top_k": self.top_k}
+
+    @staticmethod
+    def from_payload(payload: Mapping) -> "Query":
+        """Rebuild (and re-canonicalize) a query from its wire form."""
+        return Query.make(workload=payload.get("workload"),
+                          archs=payload.get("archs"),
+                          overrides=payload.get("overrides"),
+                          top_k=payload.get("top_k", 5))
+
 
 @dataclass(frozen=True)
 class Design:
@@ -105,6 +120,21 @@ class Design:
     def knobs(self, names: Sequence[str]) -> Dict[str, float]:
         """θ as a name -> value dict (``names`` from the design space)."""
         return dict(zip(names, self.theta))
+
+    def to_payload(self) -> Dict[str, object]:
+        """JSON-safe wire form."""
+        return {"theta": list(self.theta), "latency": self.latency,
+                "energy": self.energy, "cost": self.cost,
+                "cycles": list(self.cycles)}
+
+    @staticmethod
+    def from_payload(payload: Mapping) -> "Design":
+        """Rebuild a design from its wire form."""
+        return Design(theta=tuple(float(v) for v in payload["theta"]),
+                      latency=float(payload["latency"]),
+                      energy=float(payload["energy"]),
+                      cost=float(payload["cost"]),
+                      cycles=tuple(float(c) for c in payload["cycles"]))
 
 
 @dataclass(frozen=True)
@@ -135,3 +165,25 @@ class Answer:
     def best(self) -> Design:
         """The lowest-latency Pareto design (rank 0)."""
         return self.designs[0]
+
+    def to_payload(self) -> Dict[str, object]:
+        """JSON-safe wire form — the RPC front-end's answer body; the
+        round trip (``from_payload(to_payload(a)) == a``) preserves value
+        equality AND the bookkeeping tier/bound fields."""
+        return {"query": self.query.to_payload(),
+                "cells": list(self.cells),
+                "designs": [d.to_payload() for d in self.designs],
+                "best_arch": self.best_arch, "cached": self.cached,
+                "tier": self.tier, "err_bound": self.err_bound}
+
+    @staticmethod
+    def from_payload(payload: Mapping) -> "Answer":
+        """Rebuild an answer from its wire form (the client half)."""
+        return Answer(query=Query.from_payload(payload["query"]),
+                      cells=tuple(payload["cells"]),
+                      designs=tuple(Design.from_payload(d)
+                                    for d in payload["designs"]),
+                      best_arch=str(payload["best_arch"]),
+                      cached=bool(payload.get("cached", False)),
+                      tier=str(payload.get("tier", "packed")),
+                      err_bound=float(payload.get("err_bound", 0.0)))

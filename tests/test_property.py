@@ -442,6 +442,64 @@ def test_staged_routing_never_drops_dups_or_reorders(picks, max_err, k):
         svc.close()
 
 
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+@given(st.lists(st.sampled_from(["ok", "error", "poison", "kill"]),
+                min_size=0, max_size=10),
+       st.integers(1, 3), st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_no_fault_schedule_drops_dups_or_reorders(actions, attempts, k):
+    """The robustness half of the serving contract: under ANY injected
+    fault schedule — transient dispatch errors, poisoned payloads, even
+    worker-thread kills — every submitted query resolves to exactly one
+    outcome, in submission order, that is either an Answer to ITS OWN
+    question or a structured failure.  Nothing hangs, drops, duplicates,
+    or gets a batchmate's answer."""
+    from repro.serve import (Answer, CircuitBreaker, DSEService, Query,
+                             RetryPolicy, WorkerKill)
+    from repro.serve.errors import ServeError
+
+    spec = ";".join(f"packed[{i}]={a}"
+                    for i, a in enumerate(actions) if a != "ok")
+    ex = _tiny_ex()
+    svc = DSEService(ex, pool=8, max_batch=k,
+                     retry=RetryPolicy(max_attempts=attempts, base_s=0.0),
+                     breaker=CircuitBreaker(open_after=2, probe_after=1),
+                     fault_plan=spec or None)
+    try:
+        queries = [Query.make(workload="gemm", top_k=t)
+                   for t in range(1, 9)]
+        with svc.batcher.hold():                 # pin window composition
+            futs = [svc.submit(q) for q in queries]
+        outcomes = [f.exception(timeout=60.0) or f.result()
+                    for f in futs]
+        assert len(outcomes) == len(queries)     # no drop, no dup
+        for q, o in zip(queries, outcomes):
+            if isinstance(o, Answer):
+                assert o.query == q              # no reorder, no swap
+            else:
+                assert isinstance(o, (ServeError, WorkerKill)), o
+        # the schedule is finite: once it runs dry, walking the breaker
+        # (shed -> probe) with an UNCACHED query must reach a clean
+        # dispatch — each failed probe burns schedule, so the walk is
+        # bounded by the schedule length
+        probe = Query.make(workload="gemm", top_k=9)
+        for _ in range(2 * len(actions) + 4):
+            try:
+                svc.query_many([probe])
+                break
+            except (ServeError, WorkerKill):
+                continue
+        else:
+            pytest.fail("service never recovered after the schedule ran dry")
+        final = svc.query_many(queries)
+        for q, a in zip(queries, final):
+            assert isinstance(a, Answer) and a.query == q
+            assert a.tier == "packed"
+    finally:
+        svc.close()
+
+
 @given(st.integers(0, 2 ** 31 - 1), st.integers(0, 4),
        st.floats(0.05, 2.0))
 @settings(max_examples=20, deadline=None)

@@ -144,7 +144,8 @@ def test_service_routes_to_surrogate_tier(ex2, bundle):
         assert svc.evaluated_log == []
         st = svc.stats()
         assert st["surrogate_armed"] is True
-        assert st["tiers"] == {"cache": 0, "surrogate": 1, "packed": 0}
+        assert st["tiers"] == {"cache": 0, "surrogate": 1, "packed": 0,
+                               "surrogate-degraded": 0, "failed": 0}
         assert st["fallback_rate"] == 0.0
         assert st["tier_time_s"]["surrogate"] > 0.0
         assert st["tier_us_per_query"]["surrogate"] > 0.0
@@ -161,7 +162,8 @@ def test_service_falls_back_when_bound_exceeded(ex2, bundle):
         assert a.tier == "packed" and a.err_bound == 0.0
         assert svc.dispatched_candidates == 8
         st = svc.stats()
-        assert st["tiers"] == {"cache": 0, "surrogate": 0, "packed": 1}
+        assert st["tiers"] == {"cache": 0, "surrogate": 0, "packed": 1,
+                               "surrogate-degraded": 0, "failed": 0}
         assert st["fallback_rate"] == 1.0
 
 

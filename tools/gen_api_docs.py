@@ -40,6 +40,10 @@ MODULES = [
     "repro.serve.query",
     "repro.serve.batcher",
     "repro.serve.engine",
+    "repro.serve.errors",
+    "repro.serve.policy",
+    "repro.serve.faults",
+    "repro.serve.frontend",
     "repro.surrogate.model",
     "repro.surrogate.train",
 ]
